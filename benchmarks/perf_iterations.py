@@ -1,0 +1,131 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> measure.
+
+Runs the three selected cells through their optimization sequences and
+emits the iteration log consumed by EXPERIMENTS.md §Perf.  Each variant
+is a REAL re-lowering of the cell (same analysis-mode methodology as the
+baseline roofline) — numbers are measured from the partitioned HLO, not
+estimated.
+
+Cells (selection rationale in EXPERIMENTS.md):
+  A. starcoder2-3b x decode_32k   — paper-representative (binary weights
+                                    target exactly this regime)
+  B. chatglm3-6b  x train_4k      — most collective-bound
+  C. mamba2-1.3b  x prefill_32k   — worst roofline fraction (TP-dead arch)
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+
+from benchmarks import roofline as RL
+
+OUT = "experiments/perf_iterations.json"
+
+# (cell, variant-tag, quant, opts, hypothesis)
+SEQUENCES = [
+    ("A", "starcoder2-3b", "decode_32k", [
+        ("v0_baseline", None, {"kv_layout": "batch_heads"},
+         "baseline: params FSDP-sharded over data; decode all-gathers "
+         "the full weights every token (~5.4 GB/step predicted)"),
+        ("v1_resident_weights", None, {"fsdp": False,
+                                       "kv_layout": "batch_heads"},
+         "replicate params over data (inference has no opt state; "
+         "3B x 2B / 16 TP = 375 MB/chip) -> weight all-gathers vanish; "
+         "napkin: collective 90ms -> ~2ms (small TP all-reduces left)"),
+        ("v2_kv_seq_model", None, {"fsdp": False,
+                                   "kv_layout": "seq_model"},
+         "kv=2 heads cannot shard over model=16 -> attention replicated "
+         "16x; shard cache S over model instead: per-chip KV 16x down, "
+         "GSPMD synthesizes the flash-decoding combine; napkin: "
+         "attention flops/chip /16, memory term ~/2"),
+        ("v3_binary_weights", "binary_weight", {"fsdp": False,
+                                                "kv_layout": "seq_model"},
+         "paper technique: 1-bit packed weights (C1/C2) -> weight HBM "
+         "reads 16x down vs bf16; decode is weight-read-bound so the "
+         "memory term should drop ~10x (KV reads remain)"),
+        ("v4_int8_kv", "binary_weight", {"fsdp": False,
+                                         "kv_layout": "seq_model",
+                                         "kv_int8": True},
+         "beyond-paper: the paper's pack-the-memory-bound-operand idea "
+         "applied to the KV cache (int8 + per-(token,head) scale): KV "
+         "reads halve -> memory 0.66 ms -> ~0.45 ms; decode logits "
+         "within 0.03 of bf16 (tests)"),
+    ]),
+    ("B", "chatglm3-6b", "train_4k", [
+        ("v0_baseline", None, {},
+         "baseline: FSDP over data + TP over model; GSPMD resolves the "
+         "d_in@data x token@data contractions by all-reducing activation"
+         "-sized partials (~2 TB/step measured at depth-2 extrapolation)"),
+        ("v1_zero0", None, {"fsdp": False},
+         "ZeRO-degree-0: 6B params x 18 B opt bytes / 16 TP = 6.8 GB/chip"
+         " fits -> replicate over data; collectives reduce to one grad "
+         "all-reduce (2 x P_local x 4B ~ 3 GB) + TP reductions; napkin: "
+         "collective term 41 s -> ~1.5 s (25x)"),
+        ("v2_replicate_embed", None, {"fsdp": False,
+                                      "replicate_embed": True},
+         "HLO showed the vocab-sharded embedding emitting masked-gather "
+         "+ f32 (B,S,D) all-reduce per step (fwd + scatter-add bwd); "
+         "replicating the 0.5 GB table removes both; napkin: "
+         "-2 x 4.3 GB x 2(ring) = -17 GB/step -> coll -0.35 s plus the "
+         "same again in backward"),
+        ("v3_bf16_grads", None, {"fsdp": False, "replicate_embed": True,
+                                 "grads_bf16": True},
+         "mixed precision: differentiate w.r.t. bf16 weight casts so the "
+         "DP gradient all-reduce is bf16 (-24 GB, ~-4%); AdamW still "
+         "updates fp32 masters"),
+    ]),
+    ("C", "mamba2-1.3b", "prefill_32k", [
+        ("v0_baseline", None, {},
+         "baseline: fused in_proj interleaves [z|x|B|C|dt] so TP cannot "
+         "split it -> mamba compute replicated 16x over model"),
+        ("v1_resident_weights", None, {"fsdp": False},
+         "inference params replicated over data (no FSDP gathers)"),
+        ("v2_split_proj", None, {"fsdp": False, "ssm_split": True},
+         "split z/x/B/C/dt projections + per-block conv: d_inner and "
+         "heads shard cleanly over model -> SSD einsums parallelize "
+         "16x; napkin: compute term /16, plus out_proj all-reduce "
+         "(tokens x D x 4B per layer) added"),
+    ]),
+]
+
+
+def main() -> None:
+    log = []
+    for cell_id, arch, shape, variants in SEQUENCES:
+        prev = None
+        for tag, quant, opts, hypothesis in variants:
+            r = RL.analyze_cell(arch, shape, quant=quant, opts=opts,
+                                tag=tag)
+            entry = {
+                "cell": cell_id, "arch": arch, "shape": shape,
+                "variant": tag, "quant": quant or "float", "opts": opts,
+                "hypothesis": hypothesis,
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "bound_s": r["bound_s"], "dominant": r["dominant"],
+                "roofline_fraction": r["roofline_fraction"],
+            }
+            if prev is not None:
+                entry["delta_bound"] = prev["bound_s"] / max(
+                    r["bound_s"], 1e-12)
+            log.append(entry)
+            print(f"[perf] {cell_id}/{tag:22s} dom={r['dominant']:10s} "
+                  f"bound={r['bound_s']:.3e}s "
+                  f"(c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                  f"coll={r['collective_s']:.2e}) "
+                  f"frac={r['roofline_fraction']:.3f}"
+                  + (f"  [{entry['delta_bound']:.1f}x better]"
+                     if prev else ""))
+            prev = entry
+    with open(OUT, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

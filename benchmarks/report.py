@@ -1,0 +1,108 @@
+"""Assemble EXPERIMENTS.md table fragments from the JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report
+Writes experiments/fragments/{dryrun.md,roofline.md,perf.md}.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRY = "experiments/dryrun"
+ROOF = "experiments/roofline"
+FRAG = "experiments/fragments"
+
+ARCH_ORDER = ["nemotron-4-15b", "chatglm3-6b", "gemma2-9b",
+              "starcoder2-3b", "mamba2-1.3b", "llama4-maverick-400b-a17b",
+              "qwen3-moe-30b-a3b", "qwen2-vl-72b", "whisper-base",
+              "recurrentgemma-9b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f} GiB"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                path = f"{DRY}/{arch}__{shape}__{mesh}__float.json"
+                if not os.path.exists(path):
+                    continue
+                r = json.load(open(path))
+                if r["status"] == "skipped":
+                    rows.append(f"| {arch} | {shape} | {mesh} | skipped |"
+                                f" — | — | — | {r['skip_reason'][:60]}… |")
+                    continue
+                mem = r.get("memory", {})
+                arg = mem.get("argument_size_in_bytes")
+                tmp = mem.get("temp_size_in_bytes")
+                coll = r["collective_bytes_per_device"]["total"]
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | ok "
+                    f"({r['compile_s']:.0f}s) | {_fmt_bytes(arg)} "
+                    f"| {_fmt_bytes(tmp)} | {coll / 2**30:.2f} GiB | |")
+    hdr = ("| arch | shape | mesh | compile | args/device | temps/device "
+           "| collective B/device (scan-body) | note |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = f"{ROOF}/{arch}__{shape}__float__terms.json"
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            dom = r["dominant"]
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']:.2e} "
+                f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+                f"| **{dom}** | {r['model_flops_global']:.2e} "
+                f"| {r['model_vs_hlo_ratio']:.3f} "
+                f"| {r['roofline_fraction']:.3f} |")
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def perf_table() -> str:
+    path = "experiments/perf_iterations.json"
+    if not os.path.exists(path):
+        return "(perf iterations pending)"
+    log = json.load(open(path))
+    rows = []
+    for e in log:
+        delta = f"{e.get('delta_bound', 0):.1f}x" if "delta_bound" in e \
+            else "baseline"
+        rows.append(
+            f"| {e['cell']} | {e['arch']} x {e['shape']} | {e['variant']} "
+            f"| {e['compute_s']:.2e} | {e['memory_s']:.2e} "
+            f"| {e['collective_s']:.2e} | {e['dominant']} "
+            f"| {e['bound_s']:.3e} | {delta} |")
+    hdr = ("| cell | target | variant | compute s | memory s | "
+           "collective s | dominant | bound s | vs prev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def main() -> None:
+    os.makedirs(FRAG, exist_ok=True)
+    for name, fn in (("dryrun", dryrun_table),
+                     ("roofline", roofline_table),
+                     ("perf", perf_table)):
+        with open(f"{FRAG}/{name}.md", "w") as f:
+            f.write(fn())
+        print(f"wrote {FRAG}/{name}.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,302 @@
+"""§Roofline: three-term roofline per (arch x shape) from the compiled
+
+dry-run (single-pod 16x16 = 256 chips).
+
+Methodology (DESIGN.md §6 + EXPERIMENTS.md §Roofline):
+
+* XLA's HloCostAnalysis visits a while-loop body once, so a scanned
+  program under-reports by the trip count.  We therefore re-lower each
+  cell in **analysis mode** (every scan unrolled) at TWO reduced depths
+  L1 = period, L2 = 3*period and extrapolate linearly to the full depth:
+      f(L) = f(L1) + (f(L2) - f(L1)) * (L - L1) / (L2 - L1)
+  Layers are homogeneous within a pattern period, so per-device FLOPs,
+  bytes, and collective bytes are exactly affine in depth; the intercept
+  carries the depth-independent work (embeddings, logits/loss chunks).
+
+* Hardware constants (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+  50 GB/s/link ICI.
+
+    compute    = flops_per_device / 197e12
+    memory     = hbm_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--cells a:s ...] \
+        [--quant binary_weight] [--table]
+Emits experiments/roofline/<cell>.json per depth and a combined
+experiments/roofline/table.csv + markdown to stdout with --table.
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ROOF_DIR = "experiments/roofline"
+DRY_DIR = "experiments/dryrun"
+
+
+def _cells_all():
+    from repro.configs import list_configs
+    from repro.configs.shapes import SHAPES
+    return [(a, s) for a in list_configs() for s in SHAPES]
+
+
+def _analysis_depths(cfg) -> tuple[int, int]:
+    # 2 and 4 periods: avoids single-layer GSPMD strategy degeneracies
+    # that break the linear-in-depth assumption.
+    p = cfg.pattern_period
+    return 2 * p, 4 * p
+
+
+def analyze_cell(arch: str, shape_name: str, *, quant: str | None = None,
+                 force: bool = False, opts: dict | None = None,
+                 tag: str = "") -> dict | None:
+    """Two reduced-depth analysis lowers + extrapolation -> roofline terms."""
+    from repro.configs import get_config, get_shape
+    from repro.launch import dryrun as DR
+
+    cfg = get_config(arch, quant=quant)
+    # mirror run_cell's opts-driven config transforms so the analytic
+    # terms (memory model, MODEL_FLOPS) see the same architecture
+    if opts and opts.get("ssm_split") and cfg.ssm is not None:
+        cfg = dataclasses.replace(cfg, ssm=dataclasses.replace(
+            cfg.ssm, fused_proj=False))
+    if opts and opts.get("kv_int8"):
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = get_shape(shape_name)
+    if DR.cell_skip_reason(cfg, shape):
+        return None
+    l1, l2 = _analysis_depths(cfg)
+
+    recs = {}
+    for L in (l1, l2):
+        cid = (f"{arch}__{shape_name}__16x16__{quant or 'float'}"
+               f"__analysis__L{L}" + (f"__{tag}" if tag else ""))
+        path = os.path.join(ROOF_DIR, cid + ".json")
+        if os.path.exists(path) and not force:
+            recs[L] = json.load(open(path))
+        else:
+            recs[L] = DR.run_cell(arch, shape_name, quant=quant,
+                                  out_dir=ROOF_DIR, analysis=True,
+                                  layers_override=L, opts=opts, tag=tag)
+    L_full = cfg.num_layers
+
+    def extrap(key_fn):
+        f1, f2 = key_fn(recs[l1]), key_fn(recs[l2])
+        per_layer = max((f2 - f1) / (l2 - l1), 0.0)   # clamp: GSPMD may
+        base = max(f1 - per_layer * l1, 0.0)          # change strategy
+        return base + per_layer * L_full
+
+    flops = extrap(lambda r: r["flops_per_device"])
+    hbm = extrap(lambda r: r["bytes_per_device"])
+    coll = extrap(lambda r: r["collective_bytes_per_device"]["total"])
+    hbm_analytic = analytic_hbm_bytes(cfg, shape)
+
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_analytic / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    model_flops = model_flops_of(cfg, shape)
+    # per-device ideal = model flops / 256 chips
+    useful_ratio = (model_flops / 256) / max(flops, 1.0)
+    out = {
+        "arch": arch, "shape": shape_name, "quant": quant or "float",
+        "tag": tag,
+        "flops_per_device": flops, "hbm_bytes_per_device": hbm_analytic,
+        "hlo_bytes_per_device": hbm,
+        "memory_hlo_s": hbm / HBM_BW,
+        "collective_bytes_per_device": coll,
+        **{k: v for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_global": model_flops,
+        "model_vs_hlo_ratio": useful_ratio,
+        "bound_s": max(terms.values()),
+        "roofline_fraction": useful_ratio * (terms["compute_s"]
+                                             / max(terms.values())),
+    }
+    with open(os.path.join(
+            ROOF_DIR,
+            f"{arch}__{shape_name}__{quant or 'float'}"
+            + (f"__{tag}" if tag else "") + "__terms.json"),
+            "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def analytic_hbm_bytes(cfg, shape) -> float:
+    """Per-device HBM traffic model (fused-execution realistic bound).
+
+    The HLO 'bytes accessed' on the CPU backend counts every unfused
+    intermediate and overstates HBM traffic by orders of magnitude; this
+    analytic model is what a fused TPU program actually moves per step
+    and is used for the memory roofline term (the raw HLO figure is also
+    reported as ``memory_hlo_s``).
+
+    Model (per chip, mesh 16x16: model=16 TP shards, data=16 DP shards):
+      weights:  active params / 16 (TP), x(2B read)  [train: +grad write
+                4B + adam m/v read+write 16B + master rw 8B = 30B/param]
+                binary-packed weights: /16 bytes on the read.
+      acts:     ~8 live tensor passes per layer x local tokens x D x 2B
+                (train with remat: ~20 passes incl. recompute+bwd)
+      kv cache: decode reads the whole local cache slice per step.
+      logits:   local tokens x V/16 x 2B (train/prefill).
+    """
+    pc = cfg.param_counts()
+    n_active = pc["body_active"] + (
+        0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model)
+    tp = 16
+    dp = 16
+    packed = cfg.quant.mode.value != "float"
+    w_read = n_active / tp * (0.125 * 1.0 if packed else 2.0)
+    tokens_local = shape.global_batch * shape.seq_len / dp
+    d = cfg.d_model
+    L = cfg.num_layers + cfg.encoder_layers
+    if shape.kind == "train":
+        w_bytes = n_active / tp * (2.0 + 30.0) if not packed else \
+            n_active / tp * 32.0
+        act_bytes = 20.0 * L * tokens_local * d * 2.0
+        logit_bytes = tokens_local * cfg.vocab_size / tp * 2.0
+        return w_bytes + act_bytes + logit_bytes
+    if shape.kind == "prefill":
+        act_bytes = 8.0 * L * tokens_local * d * 2.0
+        logit_bytes = shape.global_batch / dp * cfg.vocab_size / tp * 2.0
+        return w_read + act_bytes + logit_bytes
+    # decode: weights + full local KV slice + tiny activations
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) in ("global", "local"))
+    kv_len = {"global": shape.seq_len,
+              "local": min(cfg.window_size, shape.seq_len)}
+    kv_byte = 2.0 if cfg.kv_cache_dtype != "int8" else         (1.0 + 2.0 / max(cfg.head_dim, 1))      # int8 + bf16 scale / D
+    kv_bytes = 0.0
+    for i in range(cfg.num_layers):
+        k = cfg.layer_kind(i)
+        if k in kv_len:
+            kv_bytes += (2 * shape.global_batch * kv_len[k]
+                         * cfg.num_kv_heads * cfg.head_dim * kv_byte)
+    kv_bytes /= (dp * tp) if shape.global_batch >= dp else tp
+    state_bytes = 0.0
+    if cfg.ssm:
+        s = cfg.ssm
+        d_in = s.expand * d
+        state_bytes = cfg.num_layers * shape.global_batch * (
+            d_in // s.head_dim) * s.head_dim * s.d_state * 4.0 * 2
+    if cfg.rglru:
+        w = cfg.rglru.lru_width or d
+        state_bytes += cfg.num_layers * shape.global_batch * w * 4.0 * 2
+    act_bytes = 8.0 * L * (shape.global_batch / min(dp,
+                                                    shape.global_batch)
+                           ) * d * 2.0
+    return w_read + kv_bytes + state_bytes + act_bytes
+
+
+def model_flops_of(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (global, per step) — the 'useful' compute.
+
+    train: 6 * N_active * tokens;  prefill: 2 * N_active * tokens +
+    attention 4*B*L_attn*Hq*D*S^2/2(causal); decode: 2 * N_active * B +
+    attention KV reads 4*B*L_attn*Hq*D*S.
+    """
+    pc = cfg.param_counts()
+    n_active = pc["body_active"] + (
+        0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model)
+    tokens = shape.global_batch * shape.seq_len
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) in ("global", "local"))
+    hd, hq = cfg.head_dim, cfg.num_heads
+    if shape.kind == "train":
+        base = 6.0 * n_active * tokens
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            k = cfg.layer_kind(i)
+            if k == "global":
+                attn += 3 * 4 * shape.global_batch * hq * hd \
+                    * shape.seq_len ** 2 / 2
+            elif k == "local":
+                w = min(cfg.window_size, shape.seq_len)
+                attn += 3 * 4 * shape.global_batch * hq * hd \
+                    * shape.seq_len * w / 2
+        # logits: 6 * B*S * D * V
+        base += 6.0 * tokens * cfg.d_model * cfg.vocab_size
+        return base + attn
+    if shape.kind == "prefill":
+        base = 2.0 * n_active * tokens
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            k = cfg.layer_kind(i)
+            if k == "global":
+                attn += 4 * shape.global_batch * hq * hd \
+                    * shape.seq_len ** 2 / 2
+            elif k == "local":
+                w = min(cfg.window_size, shape.seq_len)
+                attn += 4 * shape.global_batch * hq * hd \
+                    * shape.seq_len * w / 2
+        return base + attn + 2.0 * shape.global_batch * cfg.d_model \
+            * cfg.vocab_size
+    # decode: one token per sequence
+    base = 2.0 * n_active * shape.global_batch
+    attn = 0.0
+    for i in range(cfg.num_layers):
+        k = cfg.layer_kind(i)
+        if k == "global":
+            attn += 4 * shape.global_batch * hq * hd * shape.seq_len
+        elif k == "local":
+            attn += 4 * shape.global_batch * hq * hd \
+                * min(cfg.window_size, shape.seq_len)
+    return base + attn + 2.0 * shape.global_batch * cfg.d_model \
+        * cfg.vocab_size
+
+
+def emit_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | quant | compute s | memory s | collective s |"
+           " dominant | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['quant']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant']} "
+            f"| {r['model_vs_hlo_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="arch:shape pairs; default all")
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    cells = ([tuple(c.split(":")) for c in args.cells] if args.cells
+             else _cells_all())
+    rows = []
+    for a, s in cells:
+        try:
+            r = analyze_cell(a, s, quant=args.quant, force=args.force)
+        except Exception as e:  # noqa: BLE001
+            print(f"[roofline] {a}:{s} FAILED {e!r}")
+            continue
+        if r:
+            rows.append(r)
+            print(f"[roofline] {a:28s} {s:12s} dominant={r['dominant']:10s} "
+                  f"bound={r['bound_s']:.2e}s frac={r['roofline_fraction']:.3f}")
+    os.makedirs(ROOF_DIR, exist_ok=True)
+    with open(os.path.join(ROOF_DIR, "table.md"), "w") as f:
+        f.write(emit_table(rows))
+    print(emit_table(rows))
+
+
+if __name__ == "__main__":
+    main()

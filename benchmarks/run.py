@@ -1,0 +1,23 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: paper Tables 1-3 + memory + beyond-paper rows.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Roofline analysis (reads the dry-run artifacts) is separate:
+    PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (grad_compress_bytes, table1_matmul, table2_mlp,
+                            table3_cnn)
+    print("name,us_per_call,derived")
+    mods = [table1_matmul, table2_mlp, table3_cnn, grad_compress_bytes]
+    for mod in mods:
+        for name, us, note in mod.rows():
+            print(f"{name},{us:.1f},{note}")
+
+
+if __name__ == "__main__":
+    main()

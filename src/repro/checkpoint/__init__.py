@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (save_checkpoint, load_checkpoint,
+                                           latest_step, AsyncCheckpointer)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "AsyncCheckpointer"]

@@ -1,0 +1,109 @@
+"""Checkpointing: atomic, step-tagged, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/meta.json
+Writes go to ``step_<N>.tmp`` and are renamed into place — a crash mid-
+write never corrupts the latest checkpoint (restart safety).  Restore
+takes an optional sharding tree and ``jax.device_put``s each leaf, so a
+job restarted on a *different mesh shape* (elastic scaling) reshards
+transparently.
+
+Single-host container: arrays are gathered to host numpy.  On a real
+multi-host pod the same API would write per-process shards (the path
+structure already namespaces by step); noted in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None
+                    ) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "time": time.time(), "extra": extra or {},
+            "n_arrays": len(arrays)}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, template,
+                    shardings=None) -> tuple:
+    """Restore into the structure of ``template``; optional sharding tree
+
+    (reshard-on-restore / elastic scaling)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out_leaves = []
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    for (p, leaf), sh in zip(leaves, shard_leaves):
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out_leaves)
+    return tree, meta
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with training (one in-flight save)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot on host
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,8 @@
+from repro.configs.base import (ArchConfig, MoEConfig, SSMConfig,
+                                RGLRUConfig, ShapeConfig)
+from repro.configs.registry import get_config, list_configs
+from repro.configs.shapes import SHAPES, get_shape
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "RGLRUConfig",
+           "ShapeConfig", "get_config", "list_configs", "SHAPES",
+           "get_shape"]

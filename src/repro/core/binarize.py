@@ -1,0 +1,200 @@
+"""Binarization primitives — the paper's §4 in JAX.
+
+Encoding convention (paper §4.1): logical values are {-1,+1}; at the bit
+level we encode  -1 -> 0,  +1 -> 1.
+
+Packing convention (TPU adaptation of paper §4.2): values are packed into
+**32-bit words** (``WORD_BITS = 32``) along the LAST axis, LSB-first:
+element ``j*32 + i`` of a row occupies bit ``i`` of word ``j``.  The paper
+uses 64-bit words on CUDA; TPU vector lanes are 32-bit, so 32-bit words are
+the native choice (see DESIGN.md §2).
+
+The packed dot-product identity (paper eq. 2, rewritten for XOR):
+
+    a . b  =  K - 2 * popcount(XOR(a_packed, b_packed))
+
+since XOR counts *mismatches* (XNOR counts matches; both forms are
+equivalent: matches + mismatches = K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
+    """Pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# sign / straight-through estimator (paper §4.1, §4.4)
+# ---------------------------------------------------------------------------
+
+def sign_pm1(x: jax.Array) -> jax.Array:
+    """Paper eq. 1: sign(x) in {-1,+1} with sign(0) = +1."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+@jax.custom_vjp
+def binarize_ste(x: jax.Array) -> jax.Array:
+    """sign() with the straight-through estimator backward (paper §4.4).
+
+    Forward: sign(x) in {-1,+1}.  Backward: pass gradient where |x| <= 1,
+    zero elsewhere (Bengio et al. 2013 hard-tanh STE).
+    """
+    return sign_pm1(x)
+
+
+def _binarize_ste_fwd(x):
+    return sign_pm1(x), x
+
+
+def _binarize_ste_bwd(x, g):
+    return (jnp.where(jnp.abs(x) <= 1.0, g, 0.0).astype(g.dtype),)
+
+
+binarize_ste.defvjp(_binarize_ste_fwd, _binarize_ste_bwd)
+
+
+def clip_latent(w: jax.Array) -> jax.Array:
+    """Clip latent fp weights to [-1, 1] after the optimizer step (paper §4.4)."""
+    return jnp.clip(w, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# bit packing / unpacking (paper §4.2, TPU 32-bit words)
+# ---------------------------------------------------------------------------
+
+def packed_width(k: int) -> int:
+    """Number of 32-bit words needed for k binary elements."""
+    return (k + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack ±1 (or any sign-interpretable) values along the last axis.
+
+    ``x``: (..., K) real array.  Values >= 0 encode to bit 1, < 0 to bit 0.
+    Returns (..., ceil(K/32)) uint32.  K is zero-*bit*-padded, i.e. padded
+    logical elements encode as 0-bits; pad BOTH operands of a dot so padded
+    positions XOR to 0 and contribute no mismatches.
+    """
+    k = x.shape[-1]
+    kw = packed_width(k)
+    bits = (x >= 0).astype(WORD_DTYPE)
+    bits = pad_to_multiple(bits, WORD_BITS, axis=-1)
+    bits = bits.reshape(*x.shape[:-1], kw, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return (bits << shifts).sum(axis=-1, dtype=WORD_DTYPE)
+
+
+def unpack_bits(packed: jax.Array, k: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_bits`: (..., Kw) uint32 -> (..., k) ±1 values."""
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*packed.shape[:-1], packed.shape[-1] * WORD_BITS)
+    bits = bits[..., :k]
+    return (2.0 * bits.astype(dtype) - 1.0).astype(dtype)
+
+
+def packed_matmul(a_packed: jax.Array, b_packed: jax.Array, k: int,
+                  *, block_kw: int | None = None) -> jax.Array:
+    """Binary matmul on packed operands (paper eq. 2).
+
+    ``a_packed``: (..., M, Kw) uint32, ``b_packed``: (N, Kw) uint32.
+    Returns (..., M, N) int32 exact dot products in [-k, k].
+
+    Pure-jnp, shardable, cost-analyzable — this is the ``binary-jnp``
+    backend variant (DESIGN.md §2).  The Pallas ``binary-pallas`` variant
+    lives in ``repro.kernels.binary_matmul``.
+    """
+    kw = a_packed.shape[-1]
+    assert b_packed.shape[-1] == kw, (a_packed.shape, b_packed.shape)
+    if block_kw is None or block_kw >= kw:
+        x = jax.lax.population_count(a_packed[..., :, None, :]
+                                     ^ b_packed[None, :, :])
+        mism = x.sum(axis=-1).astype(jnp.int32)
+    else:
+        # Chunk the contraction to bound the (..., M, N, block) intermediate.
+        nblk = (kw + block_kw - 1) // block_kw
+        a_p = pad_to_multiple(a_packed, block_kw, axis=-1)
+        b_p = pad_to_multiple(b_packed, block_kw, axis=-1)
+
+        def body(i, acc):
+            a_c = jax.lax.dynamic_slice_in_dim(a_p, i * block_kw, block_kw, -1)
+            b_c = jax.lax.dynamic_slice_in_dim(b_p, i * block_kw, block_kw, -1)
+            x = jax.lax.population_count(a_c[..., :, None, :] ^ b_c[None, :, :])
+            return acc + x.sum(axis=-1).astype(jnp.int32)
+
+        acc0 = jnp.zeros((*a_packed.shape[:-1], b_packed.shape[0]), jnp.int32)
+        mism = jax.lax.fori_loop(0, nblk, body, acc0)
+    return jnp.int32(k) - 2 * mism
+
+
+def binary_dot_unpacked_mxu(x: jax.Array, w_packed: jax.Array, k: int,
+                            dtype=jnp.bfloat16) -> jax.Array:
+    """``mxu-unpack`` strategy (DESIGN.md §2): unpack packed weights to ±1
+
+    bf16 and contract on the MXU.  ``x``: (..., k) real activations (already
+    binarized or not), ``w_packed``: (N, Kw).  Returns (..., N) in ``x``'s
+    promoted dtype.  On TPU the unpack is a handful of VPU bit-ops fused
+    into the matmul operand; HBM traffic for weights stays 1-bit.
+    """
+    w = unpack_bits(w_packed, k, dtype=dtype)          # (N, k) ±1
+    return jnp.matmul(x.astype(dtype), w.T)
+
+
+# ---------------------------------------------------------------------------
+# first-layer bit-plane decomposition (paper §4.3 / eq. 3, made exact)
+# ---------------------------------------------------------------------------
+
+def bitplanes_uint8(x: jax.Array, nbits: int = 8) -> jax.Array:
+    """Split fixed-precision input into bit-planes.
+
+    ``x``: (..., K) uint8 (or int in [0, 2^nbits)).  Returns
+    (nbits, ..., K) with values in {0, 1}: plane ``i`` holds bit ``i``.
+    """
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(nbits, dtype=jnp.uint32)
+    planes = (x[None] >> shifts.reshape(nbits, *([1] * x.ndim))) & 1
+    return planes
+
+
+def bitplane_dot(x_uint8: jax.Array, w_pm1: jax.Array, nbits: int = 8
+                 ) -> jax.Array:
+    """Exact first-layer dot via bit-planes (paper §4.3, exact form).
+
+    The paper's eq. 3 composes per-plane binary dots.  A {0,1}-valued plane
+    ``p`` relates to its ±1 encoding ``p̂ = 2p - 1`` by ``p = (p̂+1)/2``, so
+
+        x . w = Σ_i 2^i (plane_i . w)
+              = Σ_i 2^(i-1) ( (planê_i ⊙ w)  +  Σ_j w_j )
+
+    where ``⊙`` is the packed XNOR-popcount dot.  The ``Σ_j w_j`` row-sum
+    correction is precomputed at pack time (same spirit as the paper's §5.2
+    zero-padding correction matrix).  This function is the jnp oracle; the
+    packed execution path lives in ``core.binary_layers.BitplaneDense``.
+
+    ``x_uint8``: (..., K); ``w_pm1``: (N, K) ±1.  Returns (..., N) int32,
+    exactly equal to ``x.astype(i32) @ w.T``.
+    """
+    planes = bitplanes_uint8(x_uint8, nbits)            # (nbits, ..., K)
+    planes_pm1 = 2.0 * planes.astype(jnp.float32) - 1.0
+    plane_dots = jnp.einsum('p...k,nk->p...n', planes_pm1,
+                            w_pm1.astype(jnp.float32))  # (nbits, ..., N)
+    w_rowsum = w_pm1.sum(axis=-1).astype(jnp.float32)   # (N,)
+    weights = (2.0 ** jnp.arange(nbits, dtype=jnp.float32)) / 2.0
+    out = jnp.tensordot(weights, plane_dots + w_rowsum, axes=((0,), (0,)))
+    return out.astype(jnp.int32)

@@ -1,0 +1,287 @@
+"""Binary layers — the paper's §5.2 layer zoo as functional JAX modules.
+
+Every layer is a pair of pure functions over pytree params:
+
+* ``init_*``          -> params (latent fp weights, trainable)
+* ``apply_*_float``   -> the float-sign reference path (numerically defines
+                         the layer; used for training with STE)
+* ``pack_*``          -> inference-time conversion: sign + bit-pack the
+                         weights ONCE (paper C2), precompute the padding
+                         correction (C5) and the folded BN threshold
+* ``apply_*_packed``  -> the optimized path on packed params
+
+The packed path is *exactly* integer-equivalent to the float-sign path
+(the paper's "numerically equivalent to BinaryNet" claim) — enforced by
+tests/test_paper_equivalence.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.kernels import ops as kops
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Dense (fully-connected) binary layer
+# ---------------------------------------------------------------------------
+
+def init_binary_dense(key: jax.Array, in_dim: int, out_dim: int) -> Params:
+    w = jax.random.uniform(key, (out_dim, in_dim), jnp.float32, -1.0, 1.0)
+    return {"w": w}
+
+
+def apply_binary_dense_float(params: Params, x: jax.Array,
+                             *, ste: bool = False) -> jax.Array:
+    """Reference: y = sign(x) . sign(W)^T, computed in fp32.
+
+    ``ste=True`` uses the straight-through estimator on both operands
+    (training path, paper §4.4).
+    """
+    binarize = B.binarize_ste if ste else B.sign_pm1
+    xb = binarize(x.astype(jnp.float32))
+    wb = binarize(params["w"])
+    return jnp.dot(xb, wb.T)
+
+
+def pack_binary_dense(params: Params) -> Params:
+    """One-time weight packing (paper C2)."""
+    w = params["w"]
+    return {"w_packed": B.pack_bits(w), "k_true": w.shape[1]}
+
+
+def apply_binary_dense_packed(packed: Params, x: jax.Array, *,
+                              backend: str = "auto") -> jax.Array:
+    """Optimized: pack(sign(x)) then XNOR-popcount GEMM.  Returns int32."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_p = kops.bitpack(x2, backend=backend)
+    out = kops.binary_matmul_packed(x_p, packed["w_packed"],
+                                    k_true=packed["k_true"], backend=backend)
+    return out.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# First-layer bit-plane dense (paper §4.3 / C4)
+# ---------------------------------------------------------------------------
+
+def pack_bitplane_dense(params: Params, nbits: int = 8) -> Params:
+    w = params["w"]
+    wb = B.sign_pm1(w)
+    return {
+        "w_packed": B.pack_bits(w),
+        "k_true": w.shape[1],
+        "w_rowsum": wb.sum(axis=1).astype(jnp.int32),   # the eq.3 correction
+        "nbits": nbits,
+    }
+
+
+def apply_bitplane_dense_packed(packed: Params, x_uint8: jax.Array, *,
+                                backend: str = "auto") -> jax.Array:
+    """First layer on fixed-precision input, fully binary-optimized.
+
+    Splits x into bit-planes, runs one packed GEMM per plane against the
+    SAME packed weights, and recombines  y = 1/2 * sum_i 2^i (d_i + rowsum)
+    (exact integer identity; see ``core.binarize.bitplane_dot``).
+    Returns (..., N) int32 == x.astype(int32) @ sign(W)^T.
+    """
+    nbits = packed["nbits"]
+    lead = x_uint8.shape[:-1]
+    x2 = x_uint8.reshape(-1, x_uint8.shape[-1])
+    planes = B.bitplanes_uint8(x2, nbits)                # (nbits, M, K) {0,1}
+    # Encode planes as ±1 by value>=?: bit 1 -> +1, bit 0 -> -1: pack_bits
+    # packs >=0 as 1, so shift to {-1,+1} first.
+    planes_pm1 = 2.0 * planes.astype(jnp.float32) - 1.0
+    acc = None
+    for i in range(nbits):
+        x_p = kops.bitpack(planes_pm1[i], backend=backend)
+        d = kops.binary_matmul_packed(x_p, packed["w_packed"],
+                                      k_true=packed["k_true"],
+                                      backend=backend)   # (M, N) int32
+        term = (d + packed["w_rowsum"][None, :]) << i
+        acc = term if acc is None else acc + term
+    out = acc >> 1                                        # exact: acc is even
+    return out.reshape(*lead, -1)
+
+
+def apply_bitplane_dense_float(params: Params, x_uint8: jax.Array
+                               ) -> jax.Array:
+    """Reference: integer GEMM of raw uint8 input against sign(W)."""
+    wb = B.sign_pm1(params["w"])
+    return jnp.dot(x_uint8.astype(jnp.float32), wb.T)
+
+
+# ---------------------------------------------------------------------------
+# Binary 2D convolution (paper C5/C6): im2col on packed words + correction
+# ---------------------------------------------------------------------------
+
+def init_binary_conv2d(key: jax.Array, kh: int, kw: int, c_in: int,
+                       c_out: int) -> Params:
+    w = jax.random.uniform(key, (c_out, kh, kw, c_in), jnp.float32, -1, 1)
+    return {"w": w}
+
+
+def apply_binary_conv2d_float(params: Params, x: jax.Array, *,
+                              stride: int = 1, padding: str = "SAME",
+                              ste: bool = False) -> jax.Array:
+    """Reference: fp conv of sign(x) with sign(W), true zero padding."""
+    binarize = B.binarize_ste if ste else B.sign_pm1
+    xb = binarize(x.astype(jnp.float32))
+    wb = binarize(params["w"])                        # (O, KH, KW, I)
+    return jax.lax.conv_general_dilated(
+        xb, jnp.transpose(wb, (1, 2, 3, 0)),          # HWIO
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def pack_binary_conv2d(params: Params, *, input_hw: tuple[int, int],
+                       stride: int = 1, padding: str = "SAME") -> Params:
+    """Pack weights along channels-per-tap (paper C3) and precompute the
+
+    zero-padding correction matrix (paper C5): since the packed kernel
+    treats padded pixels as -1, the true zero-pad result is
+    ``packed_result + conv(W, pad_indicator)`` — computed once per layer
+    for the layer's input spatial size.
+    """
+    w = params["w"]                                   # (O, KH, KW, I)
+    c_out, kh, kw, c_in = w.shape
+    w_flat = B.sign_pm1(w).reshape(c_out, kh * kw * c_in)
+    # Per-tap channel packing: (O, KH*KW, I) -> pack I -> (O, KH*KW*Iw)
+    w_taps = B.sign_pm1(w).reshape(c_out, kh * kw, c_in)
+    w_packed = B.pack_bits(w_taps).reshape(c_out, -1)
+
+    h, wdt = input_hw
+    if padding == "SAME":
+        out_h = -(-h // stride)
+        out_w = -(-wdt // stride)
+        pad_h = max((out_h - 1) * stride + kh - h, 0)
+        pad_w = max((out_w - 1) * stride + kw - wdt, 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2))
+    else:
+        out_h = (h - kh) // stride + 1
+        out_w = (wdt - kw) // stride + 1
+        pads = ((0, 0), (0, 0))
+
+    # Correction (C5): pad_mask is 1 on the padded ring, 0 inside.  The
+    # packed conv computes sum_w*(-1) at pad taps; truth is 0, so add
+    # +sum_{pad taps} w == valid-correlate(pad_mask, sum_c w).
+    pad_mask = jnp.pad(jnp.zeros((h, wdt), jnp.float32), pads,
+                       constant_values=1.0)
+    w_tap_sum = B.sign_pm1(w).sum(axis=3)             # (O, KH, KW)
+    corr = jax.lax.conv_general_dilated(
+        pad_mask[None, :, :, None],
+        jnp.transpose(w_tap_sum, (1, 2, 0))[:, :, None, :],  # HWIO, I=1
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]       # (H', W', O)
+
+    return {
+        "w_packed": w_packed, "k_true": kh * kw * c_in,
+        "kh": kh, "kw": kw, "c_in": c_in, "c_out": c_out,
+        "stride": stride, "pads": pads,
+        "out_hw": (out_h, out_w),
+        "correction": corr.astype(jnp.int32),
+        "w_flat_shape": w_flat.shape,
+    }
+
+
+def _extract_patches_packed(x_packed: jax.Array, kh: int, kw: int,
+                            stride: int, pads) -> jax.Array:
+    """im2col over channel-packed words (free-lift layout, paper C3/C6).
+
+    ``x_packed``: (B, H, W, Cw) uint32.  Spatial zero-word padding encodes
+    all-(-1) pixels — exactly the paper's "treat pad as -1" convention.
+    Returns (B, H', W', KH*KW*Cw).
+    """
+    xp = jnp.pad(x_packed, ((0, 0), pads[0], pads[1], (0, 0)),
+                 constant_values=0)                    # 0-words == all -1
+    bsz, hp, wp, cw = xp.shape
+    out_h = (hp - kh) // stride + 1
+    out_w = (wp - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = xp[:, di:di + out_h * stride:stride,
+                    dj:dj + out_w * stride:stride, :]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def apply_binary_conv2d_packed(packed: Params, x_packed: jax.Array, *,
+                               backend: str = "auto") -> jax.Array:
+    """Optimized conv: packed im2col -> XNOR GEMM -> +correction (int32).
+
+    ``x_packed``: (B, H, W, Cw) channel-packed input (pack C with
+    ``kops.bitpack`` / previous layer's packed activation).  The "lift"
+    back to a tensor is a free reshape (paper C3).
+    """
+    patches = _extract_patches_packed(x_packed, packed["kh"], packed["kw"],
+                                      packed["stride"], packed["pads"])
+    bsz, oh, ow, kcw = patches.shape
+    flat = patches.reshape(bsz * oh * ow, kcw)
+    out = kops.binary_matmul_packed(flat, packed["w_packed"],
+                                    k_true=packed["k_true"], backend=backend)
+    out = out.reshape(bsz, oh, ow, packed["c_out"])
+    return out + packed["correction"][None]
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm (inference) + sign, and the folded threshold form
+# ---------------------------------------------------------------------------
+
+def init_batchnorm(c: int) -> Params:
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def apply_batchnorm(params: Params, x: jax.Array, eps: float = 1e-5
+                    ) -> jax.Array:
+    inv = params["gamma"] * jax.lax.rsqrt(params["var"] + eps)
+    return (x.astype(jnp.float32) - params["mean"]) * inv + params["beta"]
+
+
+def fold_bn_sign(params: Params, eps: float = 1e-5) -> Params:
+    """Fold BN + sign into a per-channel integer threshold compare.
+
+    sign(gamma*(x-mu)*inv_sigma + beta) == flip * sign(x - tau) with
+    tau = mu - beta*sigma/gamma,  flip = sign(gamma).  (Beyond-paper BCNN
+    inference optimization — removes all fp math between binary GEMMs, so
+    the GEMM epilogue emits packed bits directly.)
+    """
+    sigma = jnp.sqrt(params["var"] + eps)
+    gamma = params["gamma"]
+    tau = params["mean"] - params["beta"] * sigma / gamma
+    flip = jnp.where(gamma >= 0, 1.0, -1.0)
+    return {"tau": tau, "flip": flip}
+
+
+def apply_bn_sign_folded(folded: Params, x_int: jax.Array) -> jax.Array:
+    """±1 output of sign(BN(x)) computed as a threshold compare on the raw
+
+    integer GEMM output — no fp normalization in the inference path."""
+    ge = (x_int.astype(jnp.float32) >= folded["tau"])
+    pm1 = jnp.where(ge, 1.0, -1.0) * folded["flip"]
+    return pm1
+
+
+# ---------------------------------------------------------------------------
+# Pooling
+# ---------------------------------------------------------------------------
+
+def maxpool2d(x: jax.Array, window: int = 2, stride: int | None = None
+              ) -> jax.Array:
+    stride = stride or window
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = jnp.iinfo(x.dtype).min
+    else:
+        init = -jnp.inf
+    return jax.lax.reduce_window(
+        x, init, jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1), padding="VALID")

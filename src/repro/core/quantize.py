@@ -1,0 +1,65 @@
+"""Quantization policy — how the paper's technique plugs into any model.
+
+``QuantMode`` selects, per model or per layer, how linear maps execute:
+
+* ``FLOAT``          — bf16/fp32 reference path (the literature config).
+* ``BINARY_WEIGHT``  — 1-bit packed weights, real activations
+                       (``mxu-unpack`` strategy: 32x weight-memory cut,
+                       contraction still on the MXU).
+* ``BINARY``         — 1-bit weights AND activations (paper-faithful
+                       BinaryNet semantics: sign activation + STE,
+                       XNOR-popcount dot, bit-plane first layer).
+
+``GemmStrategy`` selects the execution strategy for binary dots on TPU
+(DESIGN.md §2 — the GPU-vs-TPU inversion):
+
+* ``VPU_XNOR``   — packed XOR+popcount on the vector unit; wins when the
+                   layer is memory-bound (decode / batch-1 serving).
+* ``MXU_UNPACK`` — unpack ±1 to bf16, contract on the MXU; wins when the
+                   layer is compute-bound (training, prefill).
+* ``AUTO``       — pick by arithmetic intensity of the call site.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class QuantMode(str, enum.Enum):
+    FLOAT = "float"
+    BINARY_WEIGHT = "binary_weight"
+    BINARY = "binary"
+
+
+class GemmStrategy(str, enum.Enum):
+    VPU_XNOR = "vpu_xnor"
+    MXU_UNPACK = "mxu_unpack"
+    AUTO = "auto"
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    mode: QuantMode = QuantMode.FLOAT
+    strategy: GemmStrategy = GemmStrategy.AUTO
+    # Keep the first/last layers full precision?  BinaryNet binarizes all
+    # layers; Espresso's C4 makes even the first layer binary via
+    # bit-planes.  For LM quality experiments, embeddings/logits usually
+    # stay fp (BitNet convention) — expose the knob.
+    binarize_embeddings: bool = False
+    binarize_lm_head: bool = False
+
+    def resolve_strategy(self, m: int, n: int, k: int) -> GemmStrategy:
+        """AUTO rule: a GEMM with few output rows per weight byte is
+        memory-bound -> VPU_XNOR; otherwise MXU_UNPACK.
+
+        Napkin model (v5e): MXU peak 197 TFLOP/s vs VPU ~2.6 Tops/s int32
+        (8x128 lanes x 2 ops x 940 MHz x 8 cores — order of magnitude).
+        Unpacked bf16 GEMM moves 2*K*N weight bytes; packed moves K*N/32...
+        wait, /8 bits -> K*N/8 bytes at 1 bit... K*N/8.  The crossover in M
+        (rows amortizing the weight read) is
+            M* ~ (peak_flops / hbm_bw) * (2 bytes / (2 flops/elt)) ~ 240
+        so decode batches (M <= 256) favor the packed path purely on HBM
+        bytes; large-M prefill/training favors the MXU.
+        """
+        del n, k
+        return GemmStrategy.VPU_XNOR if m <= 256 else GemmStrategy.MXU_UNPACK

@@ -1,0 +1,305 @@
+"""Sharding rules + divisibility-aware resolver (DESIGN.md §5).
+
+Logical mesh axes:
+* ``pod``   — outer data-parallel axis (multi-pod runs)
+* ``data``  — inner data-parallel / FSDP axis
+* ``model`` — tensor/expert-parallel axis
+
+Parameter rules are matched on the *path* of each leaf in the param tree
+(column-parallel projections shard d_out over 'model', row-parallel shard
+d_in, experts shard E, embeddings shard vocab, FSDP shards one remaining
+large dim over 'data').  The resolver drops any axis assignment whose
+mesh size does not divide the dimension — small models (whisper-base)
+degrade gracefully to replication instead of failing to lower.
+
+SSM/RG-LRU internals: Mamba-2's fused in-projection interleaves five
+semantic blocks on one axis; sharding it over 'model' misaligns shard and
+split boundaries and GSPMD inserts reshuffles.  We shard Mamba-2 params
+over 'data' (FSDP) only and keep 'model' for the (elementwise-shardable)
+RG-LRU width — see EXPERIMENTS.md §Roofline notes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")      # batch shards over both when present
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def _fit(mesh: Mesh, spec: tuple, shape: tuple[int, ...]) -> P:
+    """Drop axis assignments that don't divide the dim (or don't exist)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        if size and size > 1 and dim % size == 0:
+            out.append(ax)
+        elif size == 1:
+            out.append(None)
+        else:
+            # try partial tuples: ('pod','data') -> 'data'
+            if isinstance(ax, tuple) and len(ax) > 1:
+                for sub in (ax[1:], ax[:1]):
+                    ssize = _axis_size(mesh, sub)
+                    if ssize and dim % ssize == 0:
+                        out.append(sub if len(sub) > 1 else sub[0])
+                        break
+                else:
+                    out.append(None)
+            else:
+                out.append(None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# (regex on '/'-joined path, spec builder given leaf ndim)
+# dims are written for the UNSTACKED leaf; a leading scan axis (stacked
+# layers) gets None prepended automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # attention projections (column-parallel qkv, row-parallel o)
+    (r"attn/wq/w$",      ("data", "model")),
+    (r"attn/wk/w$",      ("data", "model")),
+    (r"attn/wv/w$",      ("data", "model")),
+    (r"attn/wo/w$",      ("model", "data")),
+    (r"xattn/wq/w$",     ("data", "model")),
+    (r"xattn/wk/w$",     ("data", "model")),
+    (r"xattn/wv/w$",     ("data", "model")),
+    (r"xattn/wo/w$",     ("model", "data")),
+    # dense FFN
+    (r"mlp/w_up/w$",     ("data", "model")),
+    (r"mlp/w_gate/w$",   ("data", "model")),
+    (r"mlp/w_down/w$",   ("model", "data")),
+    (r"shared/w_up/w$",  ("data", "model")),
+    (r"shared/w_gate/w$", ("data", "model")),
+    (r"shared/w_down/w$", ("model", "data")),
+    # MoE experts: E over model (expert parallelism), FSDP over data
+    (r"mlp/router/w$",   (None, None)),
+    (r"mlp/we_up/we$",   ("model", "data", None)),      # (E, D, F)
+    (r"mlp/we_gate/we$", ("model", "data", None)),
+    (r"mlp/we_down/we$", ("model", None, "data")),
+    # RG-LRU (width shards over model; elementwise recurrence)
+    (r"rec/w_gelu/w$",   ("data", "model")),
+    (r"rec/w_rec_in/w$", ("data", "model")),
+    (r"rec/wa/w$",       ("data", "model")),
+    (r"rec/wx/w$",       ("data", "model")),
+    (r"rec/conv_w$",     (None, "model")),
+    (r"rec/conv_b$",     ("model",)),
+    (r"rec/ba$",         ("model",)),
+    (r"rec/bx$",         ("model",)),
+    (r"rec/lambda_p$",   ("model",)),
+    (r"rec/w_out/w$",    ("model", "data")),
+    # Mamba-2, fused form: FSDP only (see module docstring)
+    (r"ssm/in_proj/w$",  ("data", None)),
+    (r"ssm/out_proj/w$", (None, "data")),
+    # Mamba-2, split form (§Perf): d_inner/heads shard over 'model';
+    # B/C/dt projections replicate (small)
+    (r"ssm/[zx]_proj/w$",   ("data", "model")),
+    (r"ssm/(b|c|dt)_proj/w$", ("data", None)),
+    (r"ssm/conv_w_x$",   (None, "model")),
+    (r"ssm/conv_b_x$",   ("model",)),
+    (r"ssm/norm_tp/scale$", ("model",)),
+    (r"ssm/out_proj_tp/w$", ("model", "data")),
+    (r"ssm/.*",          (None,)),
+    # embeddings / head: vocab over model
+    (r"embed/table$",    ("model", "data")),
+    (r"head/w$",         ("data", "model")),
+    (r"dec_pos$",        (None, None)),
+    # packed (1-bit) inference weights: (d_out, kw) — column-parallel
+    # shard d_out; row-parallel shard the packed-word (d_in) axis.
+    (r"attn/w[qkv]/w_packed$", ("model", "data")),
+    (r"attn/wo/w_packed$",     ("data", "model")),
+    (r"xattn/w[qkv]/w_packed$", ("model", "data")),
+    (r"xattn/wo/w_packed$",    ("data", "model")),
+    (r"mlp/w_(up|gate)/w_packed$", ("model", "data")),
+    (r"mlp/w_down/w_packed$",  ("data", "model")),
+    (r"head/w_packed$",        ("model", "data")),
+    (r"attn/w[qkv]/alpha$",    ("model",)),
+    (r"attn/wo/alpha$",        (None,)),
+    (r"mlp/w_(up|gate)/alpha$", ("model",)),
+    (r"mlp/w_down/alpha$",     (None,)),
+    (r"head/alpha$",           ("model",)),
+    (r"w_packed$",             (None, None)),   # fallback: replicate
+    (r"alpha$",                (None,)),
+]
+
+
+def drop_fsdp(spec: tuple) -> tuple:
+    """ZeRO-degree-0 variant: replicate over 'data' (weights + opt state
+    fit per-chip); keeps TP over 'model'.  Collective cost becomes one
+    grad all-reduce instead of per-layer weight all-gathers — the §Perf
+    train-cell optimization."""
+    return tuple(None if ax == "data" else ax for ax in spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, mesh: Mesh, *, fsdp: bool = True,
+                replicate_embed: bool = False) -> Any:
+    """PartitionSpec tree for a model/optimizer param tree.
+
+    ``fsdp=False`` replicates parameters over the 'data' axis (ZeRO-0):
+    right when optimizer state fits per-chip; see ``should_fsdp``.
+    ``replicate_embed=True`` replicates the embedding table: a
+    vocab-sharded table turns every lookup into masked-gather +
+    all-reduce of the full (B, S, D) activation — replication trades
+    ~1 GB of HBM for removing that collective (§Perf cell B v2)."""
+
+    def spec_for(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return P()
+        pstr = _path_str(path)
+        if replicate_embed and re.search(r"embed/table$", pstr):
+            return P()
+        # find the matching rule whose spec rank matches the trailing dims
+        chosen = None
+        for pat, spec in _PARAM_RULES:
+            if re.search(pat, pstr) and len(spec) <= leaf.ndim:
+                # prefer exact-trailing-rank match (moe 3d vs dense 2d)
+                if chosen is None or len(spec) > len(chosen):
+                    chosen = spec
+        if chosen is None:
+            return P()
+        if not fsdp:
+            chosen = drop_fsdp(chosen)
+        # prepend None for any leading (scan-stack) axes
+        full = (None,) * (leaf.ndim - len(chosen)) + tuple(chosen)
+        return _fit(mesh, full, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def should_fsdp(cfg, mesh: Mesh, *, hbm_bytes: float = 16e9,
+                budget: float = 0.6) -> bool:
+    """ZeRO-degree policy: keep FSDP only if replicated-over-data
+    optimizer state would overflow ``budget`` of HBM.
+
+    Per-chip bytes without FSDP = total_params/TP x (4 master + 8 adam
+    + 2 bf16 + 4 grad) = 18 B/param."""
+    tp = _axis_size(mesh, "model") or 1
+    total = cfg.param_counts()["total"]
+    per_chip = total / tp * 18.0
+    return per_chip > budget * hbm_bytes
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# activations / batches / caches
+# --------------------------------------------------------------------------
+
+def batch_specs(batch_like: Any, mesh: Mesh, *,
+                shard_seq: bool = False) -> Any:
+    """Input batch: batch dim over (pod, data); optionally the sequence
+    dim instead (long-context, batch==1)."""
+
+    def spec_for(leaf):
+        if not hasattr(leaf, "ndim"):
+            return P()
+        if leaf.ndim == 0:
+            return P()
+        if shard_seq and leaf.ndim >= 2:
+            return _fit(mesh, (None, DATA_AXES) + (None,) * (leaf.ndim - 2),
+                        leaf.shape)
+        return _fit(mesh, (DATA_AXES,) + (None,) * (leaf.ndim - 1),
+                    leaf.shape)
+
+    return jax.tree.map(spec_for, batch_like)
+
+
+def cache_specs(cache: Any, mesh: Mesh, *, shard_seq: bool = False,
+                kv_layout: str = "batch_heads") -> Any:
+    """KV/state caches.  Layout (L, B, S, H, D) for attention K/V (leading
+    scan axis), (L, B, ...) for recurrent states.
+
+    kv_layout:
+      'batch_heads' (baseline): batch over (pod, data), heads over model.
+      'seq_model' (§Perf decode optimization): batch over (pod, data),
+        the S axis over 'model'.  GQA head counts rarely divide the TP
+        degree (kv=2..8 vs 16) so 'batch_heads' replicates attention
+        across the model axis; sharding S instead always divides (32k),
+        cuts the per-chip cache 16x, and GSPMD turns the softmax
+        reductions into small (B, H) all-reduces — the flash-decoding
+        combine, synthesized by the partitioner.
+    ``shard_seq``: shard S over (pod, data) too (batch==1 long-context).
+    """
+
+    def spec_for(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return P()
+        pstr = _path_str(path)
+        if re.search(r"(^|/)(k|v)$", pstr) and leaf.ndim >= 4:
+            # (..., B, S, H, D) with possible leading stack axes
+            lead = (None,) * (leaf.ndim - 4)
+            if shard_seq:
+                spec = lead + (None, DATA_AXES, "model", None)
+            elif kv_layout == "seq_model":
+                spec = lead + (DATA_AXES, "model", None, None)
+            else:
+                spec = lead + (DATA_AXES, None, "model", None)
+            return _fit(mesh, spec, leaf.shape)
+        if re.search(r"(k|v)_scale$", pstr) and leaf.ndim >= 3:
+            # int8-KV scales: (..., B, S, H) — same layout minus head_dim
+            lead = (None,) * (leaf.ndim - 3)
+            if shard_seq:
+                spec = lead + (None, DATA_AXES, "model")
+            elif kv_layout == "seq_model":
+                spec = lead + (DATA_AXES, "model", None)
+            else:
+                spec = lead + (DATA_AXES, None, "model")
+            return _fit(mesh, spec, leaf.shape)
+        # recurrent states: (..., B, ...): batch after stack axes is dim -? —
+        # use: first dim that matches the batch size heuristically; simpler:
+        # states replicate over model, batch over data at axis = ndim-2? Keep
+        # conservative: shard nothing but the leading batch-like dim found.
+        lead = (None,) * (leaf.ndim - 1)
+        if leaf.ndim >= 2:
+            spec = (None,) * (leaf.ndim - 2) + (DATA_AXES, None)
+            # the batch dim of stacked states (L, B, ...) is axis 1
+            if leaf.ndim >= 3:
+                spec = (None, DATA_AXES) + (None,) * (leaf.ndim - 2)
+            return _fit(mesh, spec, leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def logical_activation_spec(mesh: Mesh, ndim: int, *,
+                            shard_seq: bool = False) -> P:
+    if shard_seq:
+        return _fit(mesh, (None, DATA_AXES) + (None,) * (ndim - 2),
+                    (1 << 30,) * ndim)
+    return _fit(mesh, (DATA_AXES,) + (None,) * (ndim - 1), (1 << 30,) * ndim)

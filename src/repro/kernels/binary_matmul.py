@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: bit-packed binary GEMM (paper §4.2 + §5.2, C1/C7).
+
+Computes  out[m, n] = K - 2 * popcount(XOR(a[m, :], b[n, :]))  over packed
+uint32 operands — the XNOR-popcount dot-product of Espresso, adapted to TPU:
+
+* 32-bit packing words (TPU VPU lanes are 32-bit; DESIGN.md §2),
+* HBM→VMEM staging via ``BlockSpec`` tiles — the TPU analogue of the
+  paper's shared-memory tiling (C7),
+* grid (M/bm, N/bn, K/bk) with an int32 VMEM accumulator, initialized at
+  k==0 and flushed at k==last (the paper's register-blocked accumulation
+  maps onto Mosaic's vector-register allocation),
+* a GEMV-shaped specialization for small M (paper §6.2: matrix-vector swap
+  at batch 1) — the M tile collapses to the 8-sublane minimum.
+
+The contraction loop runs per-word over the packed K dimension so each
+step is one full (bm, bn) VPU op — mismatch counts accumulate in int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import binarize as B
+
+# Minimum int32 tile granularity on TPU: (8 sublanes, 128 lanes).
+_SUBLANE = 8
+_LANE = 128
+
+
+def _binary_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_true: int,
+                          n_k_blocks: int, block_kw: int):
+    """One (bm, bn) output tile; grid dim 2 walks the packed-K blocks."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]          # (bm, block_kw) uint32
+    b = b_ref[...]          # (bn, block_kw) uint32
+
+    def body(i, acc):
+        aw = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)   # (bm, 1)
+        bw = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=1)   # (bn, 1)
+        # (bm, bn) mismatch counts for packed word i — one full VPU tile op.
+        mism = jax.lax.population_count(aw ^ bw.reshape(1, -1))
+        return acc + mism.astype(jnp.int32)
+
+    acc_ref[...] = jax.lax.fori_loop(0, block_kw, body, acc_ref[...])
+
+    @pl.when(kb == n_k_blocks - 1)
+    def _flush():
+        o_ref[...] = jnp.int32(k_true) - 2 * acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "block_m", "block_n",
+                                             "block_kw", "interpret"))
+def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
+                         k_true: int, block_m: int = 128, block_n: int = 128,
+                         block_kw: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """Packed binary GEMM via Pallas.
+
+    ``a_packed``: (M, Kw) uint32, ``b_packed``: (N, Kw) uint32 (pre-packed
+    weights — packing happens once at load time, paper C2).  ``k_true`` is
+    the *logical* K before packing/padding.  Returns (M, N) int32.
+
+    Tile sizes are clamped/padded to TPU granularity: bm to 8 sublanes, bn
+    to 128 lanes, block_kw to 128 lanes of the packed operand.  Zero-padded
+    words XOR to zero and contribute no mismatches, so padding is exact
+    (see ``core.binarize.pack_bits``).
+    """
+    m, kw = a_packed.shape
+    n, kw_b = b_packed.shape
+    assert kw == kw_b, (a_packed.shape, b_packed.shape)
+
+    # GEMV specialization (paper §6.2): collapse the M tile for tiny batch.
+    if m <= _SUBLANE:
+        block_m = _SUBLANE
+    block_m = max(_SUBLANE, min(block_m, _ceil_mult(m, _SUBLANE)))
+    block_n = max(_LANE, min(block_n, _ceil_mult(n, _LANE)))
+    block_kw = max(_LANE, min(block_kw, _ceil_mult(kw, _LANE)))
+
+    a_p = B.pad_to_multiple(B.pad_to_multiple(a_packed, block_m, 0),
+                            block_kw, 1)
+    b_p = B.pad_to_multiple(B.pad_to_multiple(b_packed, block_n, 0),
+                            block_kw, 1)
+    mp, kwp = a_p.shape
+    np_, _ = b_p.shape
+    grid = (mp // block_m, np_ // block_n, kwp // block_kw)
+
+    kernel = functools.partial(_binary_matmul_kernel, k_true=k_true,
+                               n_k_blocks=grid[2], block_kw=block_kw)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_kw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_kw), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

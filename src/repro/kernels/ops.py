@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a real TPU the kernels run compiled; on CPU (this container, CI) they
+run in ``interpret=True`` mode, which executes the kernel body in Python
+with identical semantics — the correctness contract is enforced against
+``ref.py`` either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.kernels import binary_matmul as _bmm
+from repro.kernels import bitpack as _bp
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def binary_matmul(a: jax.Array, b: jax.Array, *,
+                  backend: str = "auto") -> jax.Array:
+    """End-to-end binary GEMM on real-valued operands.
+
+    ``a``: (M, K), ``b``: (N, K).  Sign-binarizes both, packs, and runs the
+    XNOR-popcount GEMM.  Returns (M, N) int32.
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' (pallas on TPU, jnp else).
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "ref":
+        return _ref.binary_matmul_ref(a, b)
+    k = a.shape[-1]
+    a_p = B.pack_bits(a)
+    b_p = B.pack_bits(b)
+    return binary_matmul_packed(a_p, b_p, k_true=k, backend=backend)
+
+
+def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
+                         k_true: int, backend: str = "auto") -> jax.Array:
+    """Binary GEMM on pre-packed operands (weights packed once, paper C2)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return _bmm.binary_matmul_packed(a_packed, b_packed, k_true=k_true,
+                                         interpret=not _on_tpu())
+    return B.packed_matmul(a_packed, b_packed, k_true)
+
+
+def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """Sign-binarize + pack along the last axis -> uint32 words."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        orig_shape = x.shape
+        x2 = x.reshape(-1, orig_shape[-1])
+        out = _bp.bitpack(x2, interpret=not _on_tpu())
+        return out.reshape(*orig_shape[:-1], out.shape[-1])
+    return B.pack_bits(x)

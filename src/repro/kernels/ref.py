@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact semantics a kernel must match
+bit-for-bit (integer outputs) or to float tolerance (float outputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+
+
+def binary_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference binary GEMM on *real-valued* operands.
+
+    ``a``: (M, K), ``b``: (N, K) — any real dtype.  Both are sign-binarized
+    to ±1 and contracted exactly: out[m, n] = sign(a[m]) . sign(b[n]).
+    Returns (M, N) int32.
+    """
+    a_b = B.sign_pm1(a.astype(jnp.float32))
+    b_b = B.sign_pm1(b.astype(jnp.float32))
+    return jnp.dot(a_b, b_b.T).astype(jnp.int32)
+
+
+def binary_matmul_packed_ref(a_packed: jax.Array, b_packed: jax.Array,
+                             k: int) -> jax.Array:
+    """Reference packed binary GEMM (paper eq. 2) — XOR + popcount form."""
+    return B.packed_matmul(a_packed, b_packed, k)
+
+
+def bitpack_ref(x: jax.Array) -> jax.Array:
+    """Reference sign-binarize + pack along last axis -> uint32 words."""
+    return B.pack_bits(x)
+
+
+def bitplane_dot_ref(x_uint8: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference first-layer bit-plane dot == exact integer GEMM."""
+    return jnp.dot(x_uint8.astype(jnp.int32),
+                   B.sign_pm1(w.astype(jnp.float32)).astype(jnp.int32).T)

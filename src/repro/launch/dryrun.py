@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        compiled.memory_analysis()   # fits?
+        compiled.cost_analysis()     # FLOPs/bytes for the roofline
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+        --shape decode_32k [--multi-pod] [--quant binary] [--out DIR]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in JSON (one file per cell) read by benchmarks/roofline.py
+and EXPERIMENTS.md.  NOTE: the XLA_FLAGS line above must execute before
+ANY other import touches jax — keep it the first statement.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, list_configs
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train import serve as SV
+from repro.train import trainer as TR
+
+# --------------------------------------------------------------------------
+# cell applicability (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: long_500k requires "
+                "sub-quadratic attention (unbounded KV at 524288); run "
+                "for SSM/hybrid only")
+    return None
+
+
+# --------------------------------------------------------------------------
+# per-kind lowering
+# --------------------------------------------------------------------------
+
+
+def _microbatches(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Grad-accum depth so one microbatch of activations fits HBM.
+
+    Napkin: live set ~ L_scan_carry + per-layer saved inputs =
+    B_mb*S*D*2bytes * L; target <= ~2 GB/chip => B_mb*S*D*L <= 1e9/chip.
+    """
+    tokens = shape.global_batch * shape.seq_len
+    act_bytes_per_chip = tokens * cfg.d_model * 2 * cfg.num_layers // 256
+    target = 4 << 30
+    mb = 1
+    while mb < shape.global_batch and act_bytes_per_chip // mb > target:
+        mb *= 2
+    return min(mb, 8)
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                     opts: dict | None = None):
+    opts = opts or {}
+    tc = TR.TrainConfig(microbatches=_microbatches(cfg, shape),
+                        grads_bf16=opts.get("grads_bf16", False))
+    step = TR.make_train_step(cfg, tc)
+    state_shape = jax.eval_shape(
+        lambda: TR.init_train_state(jax.random.PRNGKey(0), cfg, tc))
+    batch = SP.train_batch_specs(cfg, shape)
+
+    fsdp = opts.get("fsdp")
+    if fsdp is None:
+        fsdp = True                       # baseline: always FSDP
+    elif fsdp == "auto":
+        fsdp = SH.should_fsdp(cfg, mesh)
+    fsdp = bool(fsdp)
+    pspecs = SH.param_specs(state_shape["params"], mesh, fsdp=fsdp,
+                            replicate_embed=opts.get("replicate_embed",
+                                                     False))
+    state_specs = {"params": pspecs,
+                   "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+    batch_specs = SH.batch_specs(batch, mesh)
+    in_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 state_specs,
+                                 is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 batch_specs,
+                                 is_leaf=lambda x: isinstance(x, P)))
+    fn = jax.jit(step, in_shardings=in_shardings,
+                 donate_argnums=(0,))
+    return fn, (state_shape, batch)
+
+
+def _params_shape(cfg: ArchConfig):
+    """eval_shape of the (possibly packed — paper C2) inference params.
+
+    Deployment casts fp32 master weights to bf16 (halves serving HBM);
+    packed uint32 words and integer leaves pass through."""
+    from repro.core.quantize import QuantMode
+    from repro.models import linear as LNmod
+
+    def mk():
+        p = M.init_model(jax.random.PRNGKey(0), cfg)
+        if cfg.quant.mode != QuantMode.FLOAT:
+            p = LNmod.maybe_pack_tree(p, cfg.quant)
+        return jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, p)
+
+    return jax.eval_shape(mk)
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                       opts: dict | None = None):
+    opts = opts or {}
+    step = SV.make_prefill_step(cfg, max_len=shape.seq_len)
+    params_shape = _params_shape(cfg)
+    batch = SP.prefill_batch_specs(cfg, shape)
+    pspecs = SH.param_specs(params_shape, mesh,
+                            fsdp=opts.get("fsdp", True) is not False)
+    bspecs = SH.batch_specs(batch, mesh)
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                     is_leaf=lambda x: isinstance(x, P)))
+    fn = jax.jit(step, in_shardings=in_shardings)
+    return fn, (params_shape, batch)
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      opts: dict | None = None):
+    opts = opts or {}
+    step = SV.make_decode_step(cfg)
+    params_shape = _params_shape(cfg)
+    shard_seq = shape.global_batch == 1
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         params_shape),
+            cfg, shape.global_batch, shape.seq_len))
+    tokens = SP.decode_token_specs(shape)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspecs = SH.param_specs(params_shape, mesh,
+                            fsdp=opts.get("fsdp", True) is not False)
+    # production default: seq@model KV (GQA head counts rarely divide
+    # TP=16; see §Perf cell A — 81x better and the cache actually fits).
+    cspecs = SH.cache_specs(cache_shape, mesh, shard_seq=shard_seq,
+                            kv_layout=opts.get("kv_layout", "seq_model"))
+    tspecs = SH.batch_specs({"tokens": tokens}, mesh)["tokens"]
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_shardings = (ns(pspecs), ns(cspecs), ns(tspecs),
+                    NamedSharding(mesh, P()))
+    fn = jax.jit(step, in_shardings=in_shardings, donate_argnums=(1,))
+    return fn, (params_shape, cache_shape, tokens, idx)
+
+
+# --------------------------------------------------------------------------
+# collective-byte accounting from the partitioned HLO
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire-byte model from the partitioned module:
+
+    all-gather / all-to-all / collective-permute: output bytes;
+    reduce-scatter: input bytes ~= output * k (approximated by output
+    bytes of the pre-scatter operand — we use output*1 as lower bound,
+    noted); all-reduce: 2x bytes (reduce-scatter + all-gather ring)."""
+    per_kind: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        ty, kind = m.group(1), m.group(2)
+        b = _shape_bytes(ty)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        per_kind[kind] = per_kind.get(kind, 0.0) + b * factor
+    per_kind["total"] = sum(v for k, v in per_kind.items())
+    return per_kind
+
+
+# --------------------------------------------------------------------------
+# cell runner
+# --------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str | None = None, out_dir: str = "experiments/dryrun",
+             save_hlo: bool = False, analysis: bool = False,
+             layers_override: int | None = None,
+             opts: dict | None = None, tag: str = "") -> dict:
+    from repro.utils.flags import analysis_mode
+    opts = opts or {}
+    cfg = get_config(arch, quant=quant)
+    if opts.get("ssm_split"):
+        import dataclasses as _dc
+        if cfg.ssm is not None:
+            cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm,
+                                                   fused_proj=False))
+    if opts.get("kv_int8"):
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if layers_override is not None:
+        cfg = dataclasses.replace(cfg, num_layers=layers_override)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "axes": mesh.axis_names, "quant": quant or "float",
+        "kind": shape.kind, "analysis": analysis,
+        "layers_override": layers_override,
+        "num_layers": cfg.num_layers,
+        "opts": opts, "tag": tag,
+    }
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        record["status"] = "skipped"
+        record["skip_reason"] = skip
+        _save(record, out_dir)
+        return record
+
+    builders = {"train": build_train_step, "prefill": build_prefill_step,
+                "decode": build_decode_step}
+    t0 = time.monotonic()
+    with mesh, analysis_mode(analysis):
+        fn, args = builders[shape.kind](cfg, shape, mesh, opts)
+        lowered = fn.lower(*args)
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    record.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll,
+        "memory": _mem_dict(mem),
+        "param_counts": cfg.param_counts(),
+    })
+    if save_hlo:
+        record["hlo_path"] = _save_hlo(hlo, record, out_dir)
+    _save(record, out_dir)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cell_id(record: dict) -> str:
+    base = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            f"__{record['quant']}")
+    if record.get("analysis"):
+        base += "__analysis"
+    if record.get("layers_override"):
+        base += f"__L{record['layers_override']}"
+    if record.get("tag"):
+        base += f"__{record['tag']}"
+    return base
+
+
+def _save(record: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _cell_id(record) + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] {record['arch']:28s} {record['shape']:12s} "
+          f"{record['mesh']:9s} {record['quant']:13s} "
+          f"-> {record['status']}"
+          + ("" if record["status"] != "ok" else
+             f"  lower {record['lower_s']}s compile {record['compile_s']}s"
+             f"  flops/dev {record['flops_per_device']:.3e}"))
+
+
+def _save_hlo(hlo: str, record: dict, out_dir: str) -> str:
+    path = os.path.join(out_dir, _cell_id(record) + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs())
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "float", "binary_weight", "binary"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unroll scans for faithful HLO op counts "
+                         "(slow compile; roofline cells)")
+    args = ap.parse_args()
+
+    from repro.configs.shapes import SHAPES
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in list_configs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for a, s in cells:
+        try:
+            run_cell(a, s, multi_pod=args.multi_pod, quant=args.quant,
+                     out_dir=args.out, save_hlo=args.save_hlo,
+                     analysis=args.analysis)
+        except Exception as e:  # noqa: BLE001 — report all cell failures
+            failures.append((a, s, repr(e)))
+            print(f"[dryrun] {a} {s} FAILED: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(f"{a}/{s}" for a, s, _ in failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns exactly what the lowered step function consumes —
+weak-type-correct, shardable, zero device allocation.  Stub frontends
+(vlm/audio) provide precomputed embedding stand-ins per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = SDS((b, s), jnp.int32)  # replaced below
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_token_specs(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def shape_struct_tree(tree):
+    """Concrete pytree -> ShapeDtypeStruct pytree (no copies needed —
+    works on eval_shape output too)."""
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)

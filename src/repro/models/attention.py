@@ -1,0 +1,311 @@
+"""Attention: GQA with chunked (flash-style, memory-bounded) softmax.
+
+Implemented in pure jnp so the distributed dry-run's HLO is analyzable
+(cost_analysis counts the FLOPs) and GSPMD can shard it.  The online-
+softmax scan over KV chunks is the TPU-friendly formulation of
+FlashAttention — no (Sq, Skv) materialization, VMEM-sized tiles.
+
+Supports: GQA/MQA, causal + local (sliding-window) masks, attention
+softcap (gemma-2), partial RoPE (chatglm), M-RoPE (qwen2-vl), QK-norm
+(qwen3), cross-attention (whisper), and single-token decode against a
+(ring-buffered, for local layers) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as C
+from repro.models import linear as LN
+from repro.utils.flags import in_analysis_mode, xscan, xmap_seq
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ArchConfig, *,
+                   cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": LN.init_linear(ks[0], d, hq * hd),
+        "wk": LN.init_linear(ks[1], d, hkv * hd),
+        "wv": LN.init_linear(ks[2], d, hkv * hd),
+        "wo": LN.init_linear(ks[3], hq * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = C.init_rmsnorm(hd)
+        p["k_norm"] = C.init_rmsnorm(hd)
+    del cross
+    return p
+
+
+# ---------------------------------------------------------------------------
+# projections + rope
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params: dict, cfg: ArchConfig, x: jax.Array,
+                 kv_src: jax.Array | None = None):
+    dt = cfg.activation_dtype
+    kv_src = x if kv_src is None else kv_src
+    b, sq = x.shape[:2]
+    skv = kv_src.shape[1]
+    q = LN.apply_linear(params["wq"], x, cfg.quant, dtype=dt)
+    k = LN.apply_linear(params["wk"], kv_src, cfg.quant, dtype=dt)
+    v = LN.apply_linear(params["wv"], kv_src, cfg.quant, dtype=dt)
+    q = q.reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = C.apply_rmsnorm(params["q_norm"], q)
+        k = C.apply_rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def _rope(cfg: ArchConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope_style == "none":
+        return x
+    if cfg.rope_style == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        half = cfg.head_dim // 2
+        t = half // 4
+        rem = half - t
+        sections = (t, rem // 2, rem - rem // 2)
+        return C.apply_mrope(x, pos3, sections=sections, base=cfg.rope_base)
+    frac = cfg.rope_fraction if cfg.rope_style == "partial" else 1.0
+    return C.apply_rope(x, positions, fraction=frac, base=cfg.rope_base)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention core (training / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int | None = None,
+                      attn_softcap: float | None = None,
+                      q_offset: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024
+                      ) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation).  ``window``: sliding-window size for local layers
+    (positions with q_pos - k_pos >= window are masked).
+    Returns (B, Sq, Hq, D) in q.dtype; accumulation in fp32.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = d ** -0.5
+
+    if in_analysis_mode():
+        # coarser tiles: identical FLOPs, far fewer unrolled HLO ops
+        q_chunk, kv_chunk = 8192, 8192
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nkv = -(-skv // kv_chunk)
+    sq_p, skv_p = nq * q_chunk, nkv * kv_chunk
+
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    # (B, nq, qc, Hkv, G, D) grouped query layout
+    qp = qp.reshape(b, nq, q_chunk, hkv, g, d)
+    kp = kp.reshape(b, nkv, kv_chunk, hkv, d)
+    vp = vp.reshape(b, nkv, kv_chunk, hkv, d)
+
+    q_pos = (q_offset + jnp.arange(sq_p)).reshape(nq, q_chunk)
+    k_pos = jnp.arange(skv_p).reshape(nkv, kv_chunk)
+    k_valid = (jnp.arange(skv_p) < skv).reshape(nkv, kv_chunk)
+
+    def q_block(args):
+        qb, qpos = args                               # (B,qc,Hkv,G,D),(qc,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kpos, kval = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            if attn_softcap is not None:
+                s = attn_softcap * jnp.tanh(s / attn_softcap)
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = xscan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0), k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,qc,D)
+        return jnp.einsum("bhgqd->bqhgd", out)
+
+    outs = xmap_seq(q_block, (jnp.moveaxis(qp, 1, 0), q_pos))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq_p, hq, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_forward(params: dict, cfg: ArchConfig, x: jax.Array, *,
+                      positions: jax.Array, kind: str = "global",
+                      causal: bool = True,
+                      kv_src: jax.Array | None = None,
+                      return_kv: bool = False):
+    """x: (B, S, D) -> (B, S, D).  kind: 'global' | 'local'.
+
+    ``kv_src`` switches to cross-attention (no rope on cross, whisper
+    convention keeps rope_style == 'none' anyway)."""
+    q, k, v = _project_qkv(params, cfg, x, kv_src)
+    is_cross = kv_src is not None
+    if not is_cross:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    window = cfg.window_size if kind == "local" else None
+    out = chunked_attention(q, k, v, causal=causal and not is_cross,
+                            window=window, attn_softcap=cfg.attn_softcap)
+    b, s = x.shape[:2]
+    y = LN.apply_linear(params["wo"], out.reshape(b, s, -1), cfg.quant,
+                        dtype=cfg.activation_dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def _kv_quantize(x: jax.Array):
+    """(..., D) -> (int8 values, bf16 absmax-over-D scale).
+
+    Beyond-paper: the paper packs the memory-bound operand (weights);
+    at long context the KV cache becomes the memory-bound operand, so
+    the same idea applies (per-(token, head) scale keeps decode logits
+    within ~1e-2 of bf16 — tests/test_attention.py)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int,
+                    kind: str = "global", dtype=None) -> dict:
+    dtype = dtype or cfg.activation_dtype
+    size = min(max_len, cfg.window_size) if kind == "local" else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(params: dict, cfg: ArchConfig, x: jax.Array,
+                     cache: dict, idx: jax.Array, *, kind: str = "global",
+                     cross_kv: tuple | None = None):
+    """One-token decode.  x: (B, 1, D); idx: scalar int32 — the absolute
+
+    position being generated.  Local layers use a ring buffer of
+    ``window_size`` slots (slot = pos % window); global layers index the
+    full cache.  Returns (y, new_cache)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, cfg, x)            # (B,1,H*,D)
+    pos = jnp.full((b, 1), idx, jnp.int32)
+    q = _rope(cfg, q, pos)
+    k = _rope(cfg, k, pos)
+
+    size = cache["k"].shape[1]
+    slot = idx % size if kind == "local" else idx
+    int8_kv = cfg.kv_cache_dtype == "int8"
+    new_cache = dict(cache)
+    if int8_kv:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kq, slot, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vq, slot, axis=1)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, axis=1)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, axis=1)
+        ck = _kv_dequantize(new_cache["k"], new_cache["k_scale"])
+        cv = _kv_dequantize(new_cache["v"], new_cache["v_scale"])
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        ck, cv = new_cache["k"], new_cache["v"]
+
+    j = jnp.arange(size)
+    if kind == "local":
+        # absolute position stored in slot j (ring): largest p <= idx with
+        # p % size == j
+        abs_pos = idx - ((idx - j) % size)
+        valid = (abs_pos >= 0) & (abs_pos >= idx - cfg.window_size + 1)
+    else:
+        valid = j <= idx
+
+    y = _decode_score(q, ck, cv, valid, cfg)
+    if cross_kv is not None:
+        pass  # handled by caller (whisper decoder has a separate module)
+    out = LN.apply_linear(params["wo"], y.reshape(b, 1, -1), cfg.quant,
+                          dtype=cfg.activation_dtype)
+    return out, new_cache
+
+
+def _decode_score(q, ck, cv, valid, cfg: ArchConfig):
+    b, _, hq, d = q.shape
+    hkv = cfg.num_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * d ** -0.5
+    if cfg.attn_softcap is not None:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, cv.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(cfg.activation_dtype)
+
+
+def cross_attention_decode(params: dict, cfg: ArchConfig, x: jax.Array,
+                           cross_k: jax.Array, cross_v: jax.Array):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b = x.shape[0]
+    dt = cfg.activation_dtype
+    q = LN.apply_linear(params["wq"], x, cfg.quant, dtype=dt)
+    q = q.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    valid = jnp.ones((cross_k.shape[1],), bool)
+    y = _decode_score(q, cross_k, cross_v, valid, cfg)
+    return LN.apply_linear(params["wo"], y.reshape(b, 1, -1), cfg.quant,
+                           dtype=dt)

@@ -1,0 +1,244 @@
+"""The paper's evaluation networks (§6.2, §6.3) as JAX models.
+
+* ``bmlp``  — BinaryNet MLP for MNIST (Courbariaux et al. 2016 §2.1):
+              784 -> 3 x [4096 dense, BN, sign] -> 10 dense, BN.
+* ``bcnn``  — BinaryNet VGG-like CNN for CIFAR-10 (Hubara et al. 2016
+              §2.3): 2x128C3-MP2-2x256C3-MP2-2x512C3-MP2-2x1024FC-10FC,
+              BN + sign after every conv/dense.
+
+Each network has:
+  init(key, spec)        -> trainable params (latent fp weights + BN)
+  forward_float(...)     -> the float-sign reference forward
+  pack(params, spec)     -> one-time packed inference params (paper C2)
+  forward_packed(...)    -> the optimized packed forward
+
+forward_packed == forward_float exactly on the integer dots, and to fp
+round-off on the final BN logits (tests/test_paper_equivalence.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.core import binary_layers as L
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# Binary MLP (paper §6.2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BMLPSpec:
+    sizes: tuple[int, ...] = (784, 4096, 4096, 4096, 10)
+    nbits_input: int = 8          # MNIST pixels are 8-bit (paper §4.3)
+
+
+def init_bmlp(key: jax.Array, spec: BMLPSpec) -> dict:
+    layers, bns = [], []
+    for i, (d_in, d_out) in enumerate(zip(spec.sizes[:-1], spec.sizes[1:])):
+        key, sub = jax.random.split(key)
+        layers.append(L.init_binary_dense(sub, d_in, d_out))
+        bns.append(L.init_batchnorm(d_out))
+    return {"layers": layers, "bns": bns}
+
+
+def bmlp_forward_float(params: dict, x_uint8: jax.Array, *,
+                       ste: bool = False) -> jax.Array:
+    """Reference forward.  x_uint8: (B, 784) fixed-precision input."""
+    n = len(params["layers"])
+    h = None
+    for i in range(n):
+        if i == 0:
+            z = L.apply_bitplane_dense_float(params["layers"][i], x_uint8)
+        else:
+            z = L.apply_binary_dense_float(params["layers"][i], h, ste=ste)
+        z = L.apply_batchnorm(params["bns"][i], z)
+        if i < n - 1:
+            h = B.binarize_ste(z) if ste else B.sign_pm1(z)
+    return z                       # logits (no sign on the output layer)
+
+
+def pack_bmlp(params: dict, spec: BMLPSpec) -> dict:
+    n = len(params["layers"])
+    packed_layers = []
+    for i in range(n):
+        if i == 0:
+            packed_layers.append(
+                L.pack_bitplane_dense(params["layers"][i],
+                                      nbits=spec.nbits_input))
+        else:
+            packed_layers.append(L.pack_binary_dense(params["layers"][i]))
+    folded = [L.fold_bn_sign(bn) for bn in params["bns"][:-1]]
+    return {"layers": packed_layers, "folded": folded,
+            "bn_out": params["bns"][-1]}
+
+
+def bmlp_forward_packed(packed: dict, x_uint8: jax.Array, *,
+                        backend: str = "auto") -> jax.Array:
+    """Optimized forward: bit-plane first layer (C4), packed GEMMs (C1),
+
+    folded BN+sign thresholds between layers (no fp math until the output
+    BN)."""
+    n = len(packed["layers"])
+    z = L.apply_bitplane_dense_packed(packed["layers"][0], x_uint8,
+                                      backend=backend)
+    for i in range(n - 1):
+        h = L.apply_bn_sign_folded(packed["folded"][i], z)      # ±1
+        if i + 1 < n:
+            z = L.apply_binary_dense_packed(packed["layers"][i + 1], h,
+                                            backend=backend)
+    return L.apply_batchnorm(packed["bn_out"], z)
+
+
+# ---------------------------------------------------------------------------
+# Binary CNN (paper §6.3)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvStage:
+    c_out: int
+    pool: bool = False
+
+
+@dataclass(frozen=True)
+class BCNNSpec:
+    input_hw: tuple[int, int] = (32, 32)
+    c_in: int = 3
+    stages: tuple[ConvStage, ...] = (
+        ConvStage(128), ConvStage(128, pool=True),
+        ConvStage(256), ConvStage(256, pool=True),
+        ConvStage(512), ConvStage(512, pool=True),
+    )
+    dense: tuple[int, ...] = (1024, 1024, 10)
+    ksize: int = 3
+    nbits_input: int = 8
+
+
+def _stage_hw(spec: BCNNSpec):
+    """Spatial size entering each conv stage (SAME convs, pool /2)."""
+    h, w = spec.input_hw
+    out = []
+    for st in spec.stages:
+        out.append((h, w))
+        if st.pool:
+            h, w = h // 2, w // 2
+    return out, (h, w)
+
+
+def init_bcnn(key: jax.Array, spec: BCNNSpec) -> dict:
+    convs, conv_bns = [], []
+    c = spec.c_in
+    for st in spec.stages:
+        key, sub = jax.random.split(key)
+        convs.append(L.init_binary_conv2d(sub, spec.ksize, spec.ksize, c,
+                                          st.c_out))
+        conv_bns.append(L.init_batchnorm(st.c_out))
+        c = st.c_out
+    _, (fh, fw) = _stage_hw(spec)
+    d_in = fh * fw * c
+    denses, dense_bns = [], []
+    for d_out in spec.dense:
+        key, sub = jax.random.split(key)
+        denses.append(L.init_binary_dense(sub, d_in, d_out))
+        dense_bns.append(L.init_batchnorm(d_out))
+        d_in = d_out
+    return {"convs": convs, "conv_bns": conv_bns,
+            "denses": denses, "dense_bns": dense_bns}
+
+
+def bcnn_forward_float(params: dict, x_uint8: jax.Array, spec: BCNNSpec,
+                       *, ste: bool = False) -> jax.Array:
+    """Reference forward.  x_uint8: (B, H, W, C) fixed-precision input.
+
+    First conv consumes the raw integer input (no sign) — the binary
+    technique handles it via bit-planes in the packed path (paper C4)."""
+    binarize = B.binarize_ste if ste else B.sign_pm1
+    h = x_uint8.astype(jnp.float32)
+    for i, st in enumerate(spec.stages):
+        w = binarize(params["convs"][i]["w"])
+        z = jax.lax.conv_general_dilated(
+            h if i == 0 else binarize(h),
+            jnp.transpose(w, (1, 2, 3, 0)), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if st.pool:
+            z = L.maxpool2d(z)
+        z = L.apply_batchnorm(params["conv_bns"][i], z)
+        h = z
+    h = binarize(h).reshape(h.shape[0], -1)
+    n = len(params["denses"])
+    for i in range(n):
+        z = L.apply_binary_dense_float(params["denses"][i], h, ste=ste)
+        z = L.apply_batchnorm(params["dense_bns"][i], z)
+        if i < n - 1:
+            h = binarize(z)
+    return z
+
+
+def pack_bcnn(params: dict, spec: BCNNSpec) -> dict:
+    hws, _ = _stage_hw(spec)
+    packed_convs = []
+    for i, st in enumerate(spec.stages):
+        pc = L.pack_binary_conv2d(params["convs"][i], input_hw=hws[i],
+                                  stride=1, padding="SAME")
+        if i == 0:
+            # First layer runs via bit-planes (C4): per-plane conv uses the
+            # plane identity  x.w = 1/2 sum_i 2^i (p̂_i conv w + sum_taps w)
+            # — the all-taps rowsum replaces BOTH the {0,1}->±1 shift and
+            # the pad correction (pads are plane-value 0 == p̂ = -1).
+            wsign = B.sign_pm1(params["convs"][i]["w"])
+            pc = dict(pc)
+            pc["rowsum"] = wsign.sum(axis=(1, 2, 3)).astype(jnp.int32)
+            pc["correction"] = jnp.zeros_like(pc["correction"])
+        packed_convs.append(pc)
+    folded_conv = [L.fold_bn_sign(bn) for bn in params["conv_bns"]]
+    packed_dense = [L.pack_binary_dense(p) for p in params["denses"]]
+    folded_dense = [L.fold_bn_sign(bn) for bn in params["dense_bns"][:-1]]
+    return {"convs": packed_convs, "folded_conv": folded_conv,
+            "denses": packed_dense, "folded_dense": folded_dense,
+            "bn_out": params["dense_bns"][-1], "spec": spec}
+
+
+def _bitplane_conv_packed(pc: dict, x_uint8: jax.Array, nbits: int, *,
+                          backend: str = "auto") -> jax.Array:
+    acc = None
+    for i in range(nbits):
+        plane = ((x_uint8.astype(jnp.uint32) >> i) & 1)
+        plane_pm1 = 2.0 * plane.astype(jnp.float32) - 1.0
+        xp = kops.bitpack(plane_pm1.reshape(-1, plane_pm1.shape[-1]),
+                          backend=backend)
+        xp = xp.reshape(*plane_pm1.shape[:-1], -1)
+        d = L.apply_binary_conv2d_packed(pc, xp, backend=backend)
+        term = (d + pc["rowsum"][None, None, None, :]) << i
+        acc = term if acc is None else acc + term
+    return acc >> 1
+
+
+def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
+                        backend: str = "auto") -> jax.Array:
+    spec: BCNNSpec = packed["spec"]
+    z = _bitplane_conv_packed(packed["convs"][0], x_uint8,
+                              spec.nbits_input, backend=backend)
+    n_conv = len(packed["convs"])
+    for i in range(n_conv):
+        st = spec.stages[i]
+        if st.pool:
+            z = L.maxpool2d(z)
+        h_pm1 = L.apply_bn_sign_folded(packed["folded_conv"][i], z)
+        if i + 1 < n_conv:
+            hp = kops.bitpack(h_pm1.reshape(-1, h_pm1.shape[-1]),
+                              backend=backend)
+            hp = hp.reshape(*h_pm1.shape[:-1], -1)
+            z = L.apply_binary_conv2d_packed(packed["convs"][i + 1], hp,
+                                             backend=backend)
+    h = h_pm1.reshape(h_pm1.shape[0], -1)
+    n = len(packed["denses"])
+    for i in range(n):
+        z = L.apply_binary_dense_packed(packed["denses"][i], h,
+                                        backend=backend)
+        if i < n - 1:
+            h = L.apply_bn_sign_folded(packed["folded_dense"][i], z)
+    return L.apply_batchnorm(packed["bn_out"], z)

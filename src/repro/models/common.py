@@ -1,0 +1,160 @@
+"""Shared model components: norms, rotary embeddings, softcaps, embeddings.
+
+Everything is functional: ``init_*(key, ...) -> params``, pure apply fns.
+Dtype policy: params are stored fp32 (master) and cast to ``cfg.dtype``
+(bf16 by default) inside apply; norms accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}     # gemma-style (1+scale)
+
+
+def apply_rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_layernorm(params: dict, x: jax.Array, eps: float = 1e-5
+                    ) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dtype)
+
+
+def init_norm(kind: str, d: int) -> dict:
+    return init_rmsnorm(d) if kind == "rmsnorm" else init_layernorm(d)
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    return (apply_rmsnorm if kind == "rmsnorm" else apply_layernorm)(params, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings — standard / fractional (chatglm) / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rot_dim: int, base: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for ``rot_dim`` rotary dims (rot_dim even)."""
+    return 1.0 / (base ** (jnp.arange(0, rot_dim, 2, jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, fraction: float = 1.0,
+               base: float = 10000.0) -> jax.Array:
+    """Neox-style rotary embedding over the leading ``fraction`` of head_dim.
+
+    ``x``: (B, S, H, D); ``positions``: (B, S) int32.
+    ``fraction=0.5`` is the ChatGLM "2d/partial" convention: only the first
+    half of head_dim rotates, the rest passes through.
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, base)                                  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv         # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass.astype(x.dtype)], axis=-1)
+    return out
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, *,
+                sections: tuple[int, int, int] = (16, 24, 24),
+                base: float = 10000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the (D/2) frequency dims are split into
+
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  ``positions_3d``: (3, B, S).  For pure-text input all three
+    streams are the sequence index, which reduces M-RoPE to standard RoPE
+    — the property tests rely on this identity.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    inv = rope_freqs(d, base)                                    # (half,)
+    # section id per frequency dim
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    pos = positions_3d.astype(jnp.float32)                       # (3, B, S)
+    pos_per_freq = pos[sec]                                      # (half,B,S)
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * inv                # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (max_len, d)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# softcap + misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(dtype))
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int, *,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense(params: dict, x: jax.Array, dtype=None) -> jax.Array:
+    dtype = dtype or x.dtype
+    return jnp.einsum("...d,df->...f", x, params["w"].astype(dtype))

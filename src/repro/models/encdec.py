@@ -1,0 +1,163 @@
+"""Encoder-decoder backbone (whisper-base).
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model).  This module
+implements the transformer backbone: bidirectional encoder, causal
+decoder with cross-attention, sinusoidal encoder positions + learned
+decoder positions (whisper conventions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import ffn as F
+from repro.models import linear as LN
+from repro.utils import tree as T
+from repro.utils.flags import xscan
+
+
+def init_encdec_stack(key: jax.Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": C.init_norm(cfg.norm_type, cfg.d_model),
+                "attn": A.init_attention(k1, cfg),
+                "ln2": C.init_norm(cfg.norm_type, cfg.d_model),
+                "mlp": F.init_ffn(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": C.init_norm(cfg.norm_type, cfg.d_model),
+                "attn": A.init_attention(k1, cfg),
+                "ln_x": C.init_norm(cfg.norm_type, cfg.d_model),
+                "xattn": A.init_attention(k2, cfg, cross=True),
+                "ln2": C.init_norm(cfg.norm_type, cfg.d_model),
+                "mlp": F.init_ffn(k3, cfg)}
+
+    enc = T.tree_stack([enc_layer(jax.random.fold_in(ks[0], i))
+                        for i in range(cfg.encoder_layers)])
+    dec = T.tree_stack([dec_layer(jax.random.fold_in(ks[1], i))
+                        for i in range(cfg.num_layers)])
+    return {
+        "enc": enc, "dec": dec,
+        "enc_ln_out": C.init_norm(cfg.norm_type, cfg.d_model),
+        "dec_pos": jax.random.normal(ks[2], (cfg.max_position, cfg.d_model)
+                                     ) * 0.01,
+    }
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array,
+           *, remat: bool = True) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed frame embeddings (stub frontend)."""
+    b, s, _ = frames.shape
+    pos = C.sinusoidal_positions(s, cfg.d_model).astype(frames.dtype)
+    x = frames + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, lp):
+        a = A.attention_forward(lp["attn"], cfg,
+                                C.apply_norm(cfg.norm_type, lp["ln1"], h),
+                                positions=positions, causal=False)
+        h = h + a
+        y = F.apply_ffn(lp["mlp"], cfg,
+                        C.apply_norm(cfg.norm_type, lp["ln2"], h))
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = xscan(body, x, params["enc"])
+    return C.apply_norm(cfg.norm_type, params["enc_ln_out"], x)
+
+
+def decode_train(params: dict, cfg: ArchConfig, x: jax.Array,
+                 enc_out: jax.Array, positions: jax.Array,
+                 *, remat: bool = True) -> jax.Array:
+    """Teacher-forced decoder pass.  x: (B, S_dec, D) token embeddings."""
+    pos_emb = params["dec_pos"][:x.shape[1]].astype(x.dtype)
+    x = x + pos_emb[None]
+
+    def body(h, lp):
+        a = A.attention_forward(lp["attn"], cfg,
+                                C.apply_norm(cfg.norm_type, lp["ln1"], h),
+                                positions=positions)
+        h = h + a
+        xa = A.attention_forward(lp["xattn"], cfg,
+                                 C.apply_norm(cfg.norm_type, lp["ln_x"], h),
+                                 positions=positions, kv_src=enc_out)
+        h = h + xa
+        y = F.apply_ffn(lp["mlp"], cfg,
+                        C.apply_norm(cfg.norm_type, lp["ln2"], h))
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = xscan(body, x, params["dec"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode (serving): self-attn cache + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(params: dict, cfg: ArchConfig, batch: int,
+                      max_len: int, enc_len: int) -> dict:
+    self_c = T.tree_stack([A.init_attn_cache(cfg, batch, max_len)
+                           for _ in range(cfg.num_layers)])
+    dt = cfg.activation_dtype
+    cross = {
+        "k": jnp.zeros((cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
+                        cfg.head_dim), dt),
+        "v": jnp.zeros((cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
+                        cfg.head_dim), dt),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def precompute_cross_kv(params: dict, cfg: ArchConfig, enc_out: jax.Array
+                        ) -> dict:
+    """Cross-attention K/V from encoder output, per decoder layer."""
+    b, s, _ = enc_out.shape
+    dt = cfg.activation_dtype
+
+    def one(lp):
+        k = LN.apply_linear(lp["xattn"]["wk"], enc_out, cfg.quant, dtype=dt)
+        v = LN.apply_linear(lp["xattn"]["wv"], enc_out, cfg.quant, dtype=dt)
+        return (k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim),
+                v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim))
+
+    ks, vs = jax.lax.map(one, params["dec"])
+    return {"k": ks, "v": vs}
+
+
+def decode_step(params: dict, cfg: ArchConfig, x: jax.Array, cache: dict,
+                idx: jax.Array):
+    """One-token decoder step.  x: (B, 1, D) embedded token."""
+    pos_emb = jax.lax.dynamic_index_in_dim(params["dec_pos"], idx, 0,
+                                           keepdims=True)
+    x = x + pos_emb[None].astype(x.dtype)
+
+    def body(h, inp):
+        lp, self_c, ck, cv = inp
+        a, new_c = A.attention_decode(
+            lp["attn"], cfg, C.apply_norm(cfg.norm_type, lp["ln1"], h),
+            self_c, idx)
+        h = h + a
+        xa = A.cross_attention_decode(
+            lp["xattn"], cfg, C.apply_norm(cfg.norm_type, lp["ln_x"], h),
+            ck, cv)
+        h = h + xa
+        y = F.apply_ffn(lp["mlp"], cfg,
+                        C.apply_norm(cfg.norm_type, lp["ln2"], h))
+        return h + y, new_c
+
+    x, new_self = xscan(
+        body, x, (params["dec"], cache["self"], cache["cross"]["k"],
+                  cache["cross"]["v"]))
+    return x, {"self": new_self, "cross": cache["cross"]}

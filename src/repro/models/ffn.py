@@ -1,0 +1,54 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU/squared-ReLU).
+
+All projections route through the quant-aware Linear so the paper's binary
+mode applies uniformly (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import linear as LN
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu2":                       # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def is_gated(ffn_type: str) -> bool:
+    return ffn_type in ("swiglu", "geglu")
+
+
+def init_ffn(key: jax.Array, cfg: ArchConfig, d_ff: int | None = None
+             ) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": LN.init_linear(ks[0], d, f),
+         "w_down": LN.init_linear(ks[1], f, d)}
+    if is_gated(cfg.ffn_type):
+        p["w_gate"] = LN.init_linear(ks[2], d, f)
+    return p
+
+
+def apply_ffn(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    dt = cfg.activation_dtype
+    up = LN.apply_linear(params["w_up"], x, cfg.quant, dtype=dt)
+    t = cfg.ffn_type
+    if t == "swiglu":
+        gate = LN.apply_linear(params["w_gate"], x, cfg.quant, dtype=dt)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    elif t == "geglu":
+        gate = LN.apply_linear(params["w_gate"], x, cfg.quant, dtype=dt)
+        h = jax.nn.gelu(gate.astype(jnp.float32)).astype(dt) * up
+    else:
+        h = _act(t, up.astype(jnp.float32)).astype(dt)
+    return LN.apply_linear(params["w_down"], h, cfg.quant, dtype=dt)

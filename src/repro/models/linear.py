@@ -1,0 +1,120 @@
+"""Quantization-aware linear maps — the paper's technique as an LM feature.
+
+A ``Linear`` params dict is either:
+
+* float form:   {"w": (d_in, d_out) fp32}                (training / FLOAT)
+* packed form:  {"w_packed": (d_out, d_in/32) uint32,    (inference,
+                 "alpha": (d_out,) fp32, "k_true": int}    pack-once — C2)
+
+``apply_linear`` dispatches on QuantMode + GemmStrategy:
+
+* FLOAT          -> bf16 einsum (MXU).
+* BINARY_WEIGHT  -> sign(W) with per-output-channel scale alpha
+                    (XNOR-Net-style scaling, Rastegari et al. 2016 — the
+                    binarization family the paper builds on); activations
+                    stay real.  Packed weights cut HBM bytes 32x/16x-vs-
+                    bf16; contraction via MXU_UNPACK or VPU bit-count.
+* BINARY         -> paper-faithful: sign on activations too (STE in
+                    training), XNOR-popcount dot (eq. 2).
+
+Strategy (DESIGN.md §2, the GPU->TPU inversion):
+* VPU_XNOR   — packed XOR+popcount (``binary-jnp`` here; the Pallas kernel
+               in ``repro.kernels`` is the on-device path).
+* MXU_UNPACK — unpack ±1 -> bf16, contract on the MXU.
+* AUTO       — by output-row count (memory- vs compute-bound).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.core.quantize import GemmStrategy, QuantConfig, QuantMode
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, *,
+                scale: float | None = None) -> dict:
+    s = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * s}
+
+
+def pack_linear(params: dict) -> dict:
+    """One-time conversion to packed inference form (paper C2).
+
+    Handles scan-stacked weights: (..., d_in, d_out) packs along d_in.
+    ``k_true`` (the logical d_in) is NOT stored — it is recovered
+    statically from the activation's trailing dim at apply time, so the
+    packed dict contains only arrays (scan-stackable).
+    """
+    w = params["w"]
+    wt = jnp.swapaxes(w, -1, -2)                      # (..., d_out, d_in)
+    alpha = jnp.mean(jnp.abs(wt), axis=-1)            # per-output scale
+    return {"w_packed": B.pack_bits(wt), "alpha": alpha}
+
+
+def is_packed(params: dict) -> bool:
+    return "w_packed" in params
+
+
+def apply_linear(params: dict, x: jax.Array, quant: QuantConfig,
+                 *, dtype=jnp.bfloat16) -> jax.Array:
+    """y = x @ W under the quantization policy.  x: (..., d_in)."""
+    mode = quant.mode
+    if is_packed(params):
+        return _apply_packed(params, x, quant, dtype)
+    w = params["w"]
+    if mode == QuantMode.FLOAT:
+        return jnp.einsum("...d,df->...f", x.astype(dtype), w.astype(dtype))
+    # latent-weight training paths (STE)
+    wb = B.binarize_ste(w)                            # ±1 with STE bwd
+    alpha = jax.lax.stop_gradient(jnp.mean(jnp.abs(w), axis=0))
+    if mode == QuantMode.BINARY:
+        xb = B.binarize_ste(x.astype(jnp.float32))
+        y = jnp.einsum("...d,df->...f", xb, wb)
+    else:                                             # BINARY_WEIGHT
+        y = jnp.einsum("...d,df->...f", x.astype(jnp.float32), wb)
+    return (y * alpha).astype(dtype)
+
+
+def _apply_packed(params: dict, x: jax.Array, quant: QuantConfig,
+                  dtype) -> jax.Array:
+    k = x.shape[-1]                                   # logical d_in (static)
+    alpha = params["alpha"]
+    m = 1
+    for s in x.shape[:-1]:
+        m *= s
+    strat = quant.strategy
+    if strat == GemmStrategy.AUTO:
+        strat = quant.resolve_strategy(m, alpha.shape[0], k)
+    if quant.mode == QuantMode.BINARY:
+        xb = B.sign_pm1(x.astype(jnp.float32))
+        if strat == GemmStrategy.VPU_XNOR:
+            x2 = xb.reshape(m, k)
+            xp = B.pack_bits(x2)
+            y = B.packed_matmul(xp, params["w_packed"], k).astype(jnp.float32)
+            y = y.reshape(*x.shape[:-1], -1)
+        else:
+            y = B.binary_dot_unpacked_mxu(xb, params["w_packed"], k,
+                                          dtype=jnp.float32)
+    else:                                             # BINARY_WEIGHT
+        # real activations: XNOR path does not apply; always unpack->MXU.
+        y = B.binary_dot_unpacked_mxu(x, params["w_packed"], k, dtype=dtype)
+        y = y.astype(jnp.float32)
+    return (y * alpha).astype(dtype)
+
+
+def maybe_pack_tree(params, quant: QuantConfig):
+    """Recursively pack every Linear in a param tree for inference
+    (weights pack ONCE at load — paper C2).  Leaves non-linear params
+    untouched.  Embeddings / heads follow the QuantConfig knobs upstream.
+    """
+    if quant.mode == QuantMode.FLOAT:
+        return params
+    if isinstance(params, dict):
+        if "w" in params and len(params) == 1 and \
+                getattr(params["w"], "ndim", 0) >= 2:
+            return pack_linear(params)
+        return {k: maybe_pack_tree(v, quant) for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(maybe_pack_tree(v, quant) for v in params)
+    return params

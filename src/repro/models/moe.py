@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+Design (DESIGN.md §5): tokens are flattened to (G groups, Tg tokens) and
+each group dispatches into per-expert slot buffers of capacity
+C = ceil(Tg * top_k / E * capacity_factor).  Dispatch uses a cumsum-based
+position-in-expert (the (T, E) mask is materialized — cheap — never the
+(T, E, C) one-hot), then pure gathers/scatters:
+
+    slot_token[g, e, c] -> token index (or -1)     scatter
+    x_disp[g, e, c, :]  =  x[g, slot_token]        gather
+    y[g, t, :]         +=  w_slot * expert_e(x_disp)[g, e, c]   scatter-add
+
+Sharding: G maps to the data axes, E to the model axis (expert
+parallelism); the combine scatter-add produces per-expert partials that
+GSPMD all-reduces over the model axis — the standard EP collective.
+Overflowing tokens are dropped (GShard/Switch semantics); tests check the
+ample-capacity case reproduces the dense reference exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import ffn as F
+from repro.models import linear as LN
+
+
+def _expert_w(p: dict, cfg: ArchConfig) -> jax.Array:
+    """Expert weight under the quant policy: FLOAT -> raw; BINARY* ->
+
+    sign(W) * per-(expert, out-channel) alpha with STE (the paper's
+    technique applied to expert FFNs — DESIGN.md §7).  Expert weights stay
+    unpacked in the EP einsum path; the 32x storage cut applies via
+    ``pack_bits`` at deployment (documented, not exercised here)."""
+    from repro.core import binarize as B
+    from repro.core.quantize import QuantMode
+    w = p["we"]
+    if cfg.quant.mode == QuantMode.FLOAT:
+        return w
+    alpha = jax.lax.stop_gradient(jnp.mean(jnp.abs(w), axis=-2,
+                                           keepdims=True))
+    return B.binarize_ste(w) * alpha
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    n_up = 2 if F.is_gated(cfg.ffn_type) else 1
+    p = {
+        "router": LN.init_linear(ks[0], d, e),
+        "we_up": {"we": jax.random.normal(ks[1], (e, d, f)) * d ** -0.5},
+        "we_down": {"we": jax.random.normal(ks[2], (e, f, d)) * f ** -0.5},
+    }
+    if n_up == 2:
+        p["we_gate"] = {"we": jax.random.normal(ks[3], (e, d, f)) * d ** -0.5}
+    if m.shared_experts:
+        p["shared"] = F.init_ffn(ks[4], cfg, d_ff=m.d_ff_expert
+                                 * m.shared_experts)
+    return p
+
+
+def _capacity(tg: int, m: MoEConfig) -> int:
+    c = int(tg * m.top_k / m.num_experts * m.capacity_factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _dispatch_indices(sel: jax.Array, e: int, c: int):
+    """sel: (T, K) expert ids.  Returns (slot_token (E, C) int32 [-1 pad],
+    slot_weighti (E, C) int32 index into (T*K) flat slots, keep mask)."""
+    t, k = sel.shape
+    flat = sel.reshape(t * k)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)         # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1             # pos in expert
+    pos = pos.max(axis=1)                                     # (T*K,)
+    keep = pos < c
+    dest = jnp.where(keep, flat * c + pos, e * c)             # overflow slot
+    slot_flatidx = jnp.full((e * c + 1,), -1, jnp.int32)
+    slot_flatidx = slot_flatidx.at[dest].set(
+        jnp.arange(t * k, dtype=jnp.int32))
+    slot_flatidx = slot_flatidx[:-1].reshape(e, c)            # (E, C)
+    slot_token = jnp.where(slot_flatidx >= 0, slot_flatidx // k, -1)
+    return slot_token, slot_flatidx
+
+
+def apply_moe(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    m = cfg.moe
+    dt = cfg.activation_dtype
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)                                  # groups = B*S/Tg
+    # group so dispatch buffers stay device-local; G == B keeps the batch
+    # sharding intact.
+    g = b
+    tg = s
+    xg = xf.reshape(g, tg, d)
+
+    logits = LN.apply_linear(params["router"], xg, cfg.quant,
+                             dtype=jnp.float32)               # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)              # (G, Tg, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    c = _capacity(tg, m)
+
+    def per_group(xg1, sel1, w1):
+        slot_token, slot_flatidx = _dispatch_indices(sel1, m.num_experts, c)
+        x_disp = xg1[jnp.clip(slot_token, 0)]                 # (E, C, D)
+        x_disp = x_disp * (slot_token >= 0)[..., None]
+        # expert FFN (E batched einsums)
+        up = jnp.einsum("ecd,edf->ecf", x_disp.astype(dt),
+                        _expert_w(params["we_up"], cfg).astype(dt))
+        if "we_gate" in params:
+            gate = jnp.einsum("ecd,edf->ecf", x_disp.astype(dt),
+                              _expert_w(params["we_gate"], cfg).astype(dt))
+            act = jax.nn.silu if cfg.ffn_type == "swiglu" else jax.nn.gelu
+            h = act(gate.astype(jnp.float32)).astype(dt) * up
+        else:
+            h = jax.nn.gelu(up.astype(jnp.float32)).astype(dt)
+        y_disp = jnp.einsum("ecf,efd->ecd", h,
+                            _expert_w(params["we_down"], cfg).astype(dt))  # (E, C, D)
+        # combine: scatter-add back to tokens with routing weights
+        w_flat = w1.reshape(-1)                                # (Tg*K,)
+        w_slot = jnp.where(slot_flatidx >= 0,
+                           w_flat[jnp.clip(slot_flatidx, 0)], 0.0)
+        y = jnp.zeros((tg, d), jnp.float32)
+        y = y.at[jnp.clip(slot_token, 0)].add(
+            (y_disp.astype(jnp.float32) * w_slot[..., None]))
+        return y
+
+    y = jax.vmap(per_group)(xg, top_e, top_w)                  # (G, Tg, D)
+    y = y.reshape(b, s, d).astype(dt)
+    if "shared" in params:
+        y = y + F.apply_ffn(params["shared"], cfg, x)
+    return y
+
+
+def moe_dense_reference(params: dict, cfg: ArchConfig, x: jax.Array
+                        ) -> jax.Array:
+    """O(T*E) dense oracle: every expert on every token, combine by router
+
+    weights.  Used by tests (ample capacity must match exactly up to
+    dtype)."""
+    m = cfg.moe
+    dt = jnp.float32
+    b, s, d = x.shape
+    logits = LN.apply_linear(params["router"], x, cfg.quant, dtype=dt)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    up = jnp.einsum("bsd,edf->bsef", x.astype(dt),
+                    _expert_w(params["we_up"], cfg).astype(dt))
+    if "we_gate" in params:
+        gate = jnp.einsum("bsd,edf->bsef", x.astype(dt),
+                          _expert_w(params["we_gate"], cfg).astype(dt))
+        act = jax.nn.silu if cfg.ffn_type == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y_all = jnp.einsum("bsef,efd->bsed", h, _expert_w(params["we_down"], cfg).astype(dt))
+    mask = jax.nn.one_hot(top_e, m.num_experts, dtype=dt)      # (B,S,K,E)
+    w_per_e = jnp.einsum("bske,bsk->bse", mask, top_w)
+    y = jnp.einsum("bsed,bse->bsd", y_all, w_per_e)
+    if "shared" in params:
+        y = y + F.apply_ffn(params["shared"], cfg,
+                            x).astype(dt)
+    return y.astype(cfg.activation_dtype)

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block — Griffin / RecurrentGemma (arXiv:2402.19427).
+
+Recurrence (eq. 1-4 of the paper):
+    r_t = sigmoid(W_a x_t + b_a)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (log-space decay)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block around it (Griffin "recurrent block"): two parallel branches of
+width ``lru_width`` — (linear -> GeLU) and (linear -> causal conv1d ->
+RG-LRU) — merged multiplicatively, then projected back to d_model.
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+(h_t = a_t h_{t-1} + b_t), which parallelizes to O(log S) depth — the
+TPU-native mapping of the paper's custom "linear scan" Pallas/TPU kernel.
+Decode is the O(1) recurrence.
+
+Paper-technique note (DESIGN.md §7): branch projections are quant-aware;
+the gates/recurrence stay fp (data-dependent products in (0,1)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as C
+from repro.models import linear as LN
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru_block(key: jax.Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    r = cfg.rglru
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (paper App. A)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * r.c_exponent)))
+    return {
+        "w_gelu": LN.init_linear(ks[0], d, w),
+        "w_rec_in": LN.init_linear(ks[1], d, w),
+        "conv_w": jax.random.normal(ks[2], (r.conv_width, w)) * 0.1,
+        "conv_b": jnp.zeros((w,)),
+        "wa": LN.init_linear(ks[3], w, w),
+        "ba": jnp.zeros((w,)),
+        "wx": LN.init_linear(ks[5], w, w),
+        "bx": jnp.zeros((w,)),
+        "lambda_p": lam,
+        "w_out": LN.init_linear(ks[6], w, d),
+    }
+
+
+def _gates(params: dict, cfg: ArchConfig, x: jax.Array):
+    """x: (..., W) fp32 -> (log_a, gated_input) both (..., W) fp32."""
+    r = cfg.rglru
+    ra = jax.nn.sigmoid(
+        LN.apply_linear(params["wa"], x, cfg.quant, dtype=jnp.float32)
+        + params["ba"])
+    ix = jax.nn.sigmoid(
+        LN.apply_linear(params["wx"], x, cfg.quant, dtype=jnp.float32)
+        + params["bx"])
+    log_a = -r.c_exponent * jax.nn.softplus(params["lambda_p"]) * ra
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (ix * x)
+    return a, b
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+            init_state: jax.Array | None = None):
+    k = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1):, :]
+
+
+def rglru_block_forward(params: dict, cfg: ArchConfig, x: jax.Array, *,
+                        init_cache: dict | None = None,
+                        return_cache: bool = False):
+    """x: (B, S, D) -> (B, S, D)."""
+    dt = cfg.activation_dtype
+    gelu_branch = jax.nn.gelu(
+        LN.apply_linear(params["w_gelu"], x, cfg.quant,
+                        dtype=jnp.float32))
+    rec = LN.apply_linear(params["w_rec_in"], x, cfg.quant,
+                          dtype=jnp.float32)
+    conv_init = init_cache["conv"] if init_cache else None
+    rec, conv_state = _conv1d(rec, params["conv_w"], params["conv_b"],
+                              conv_init)
+    a, b = _gates(params, cfg, rec)                       # (B,S,W)
+    h0 = init_cache["h"] if init_cache else jnp.zeros(
+        (x.shape[0], rec.shape[-1]), jnp.float32)
+    # fold h0 into the first step:  h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gelu_branch * h).astype(dt)
+    out = LN.apply_linear(params["w_out"], y, cfg.quant, dtype=dt)
+    if return_cache:
+        return out, {"conv": conv_state, "h": h[:, -1, :]}
+    return out
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int) -> dict:
+    w = _width(cfg)
+    return {"conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w),
+                              jnp.float32),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+
+
+def rglru_block_decode(params: dict, cfg: ArchConfig, x: jax.Array,
+                       cache: dict):
+    """x: (B, 1, D) single-step recurrence."""
+    dt = cfg.activation_dtype
+    gelu_branch = jax.nn.gelu(
+        LN.apply_linear(params["w_gelu"], x, cfg.quant, dtype=jnp.float32))
+    rec = LN.apply_linear(params["w_rec_in"], x, cfg.quant,
+                          dtype=jnp.float32)
+    conv_in = jnp.concatenate([cache["conv"], rec], axis=1)
+    y_conv = (conv_in * params["conv_w"][None]).sum(axis=1, keepdims=True) \
+        + params["conv_b"]
+    new_conv = conv_in[:, 1:, :]
+    a, b = _gates(params, cfg, y_conv)                    # (B,1,W)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (gelu_branch[:, 0] * h).astype(dt)[:, None, :]
+    out = LN.apply_linear(params["w_out"], y, cfg.quant, dtype=dt)
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,306 @@
+"""Mamba-2 block — SSD (state-space duality) chunked algorithm.
+
+Faithful to Dao & Gu, arXiv:2405.21060 ("minimal mamba2" formulation):
+  zxbcdt = in_proj(u)                         # [z | x | B | C | dt]
+  x,B,C <- causal conv1d (width d_conv) + silu
+  dt    <- softplus(dt + dt_bias);   A = -exp(A_log)   (per head)
+  y     = SSD(x * dt, A * dt, B, C)  + D * x
+  out   = out_proj( rmsnorm(y * silu(z)) )
+
+The SSD scan runs chunk-by-chunk (lax.scan over S/chunk steps) carrying
+the (B, H, P, N) inter-chunk state — O(S * chunk) memory instead of the
+naive O(S^2) attention-dual.  Decode is the constant-memory recurrence.
+
+Paper-technique note (DESIGN.md §7): in/out projections are quant-aware
+Linears (binarizable); the selective recurrence itself is NOT binarized —
+sign-quantizing Δ/A/B/C collapses selectivity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as C
+from repro.models import linear as LN
+from repro.utils.flags import xscan
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return s, d_inner, nheads, conv_dim
+
+
+def init_mamba2(key: jax.Array, cfg: ArchConfig) -> dict:
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    lo, hi = s.a_init_range
+    a = jnp.exp(jax.random.uniform(ks[2], (nheads,),
+                                   minval=jnp.log(lo), maxval=jnp.log(hi)))
+    p = {
+        "A_log": jnp.log(a),
+        "D": jnp.ones((nheads,)),
+        "dt_bias": jnp.zeros((nheads,)),
+        "norm": C.init_rmsnorm(d_inner),
+        "out_proj": LN.init_linear(ks[3], d_inner, d),
+    }
+    gn = s.ngroups * s.d_state
+    if s.fused_proj:
+        d_in_proj = 2 * d_inner + 2 * gn + nheads
+        p["in_proj"] = LN.init_linear(ks[0], d, d_in_proj)
+        p["conv_w"] = jax.random.normal(ks[1], (s.d_conv, conv_dim)) * 0.1
+        p["conv_b"] = jnp.zeros((conv_dim,))
+    else:
+        # §Perf split form: boundaries align with TP shards (docstring)
+        # TP-shardable variants carry distinct names so the sharding
+        # rules can treat them differently from the fused form.
+        p["out_proj_tp"] = p.pop("out_proj")
+        p["norm_tp"] = p.pop("norm")
+        p["z_proj"] = LN.init_linear(ks[0], d, d_inner)
+        p["x_proj"] = LN.init_linear(ks[4], d, d_inner)
+        p["b_proj"] = LN.init_linear(ks[5], d, gn)
+        p["c_proj"] = LN.init_linear(ks[6], d, gn)
+        p["dt_proj"] = LN.init_linear(ks[7], d, nheads)
+        p["conv_w_x"] = jax.random.normal(ks[1], (s.d_conv, d_inner)) * 0.1
+        p["conv_b_x"] = jnp.zeros((d_inner,))
+        p["conv_w_b"] = jax.random.normal(ks[8], (s.d_conv, gn)) * 0.1
+        p["conv_b_b"] = jnp.zeros((gn,))
+        p["conv_w_c"] = jax.random.normal(ks[9], (s.d_conv, gn)) * 0.1
+        p["conv_b_c"] = jnp.zeros((gn,))
+    return p
+
+
+def _split_zxbcdt(cfg: ArchConfig, zxbcdt: jax.Array):
+    s, d_inner, nheads, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _conv1d(xbc: jax.Array, w: jax.Array, b: jax.Array,
+            init_state: jax.Array | None = None):
+    """Causal depthwise conv along S.  xbc: (B, S, C); w: (K, C).
+
+    Returns (y, final_state) where final_state = last K-1 inputs."""
+    k = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]),
+                               xbc.dtype)
+    xp = jnp.concatenate([init_state, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1):, :]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L).  out[..., i, j] = sum_{k=j+1..i} a_k  (i >= j), -inf
+    above the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]      # i row, j col
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, init_state: jax.Array | None = None):
+    """SSD chunked scan.
+
+    x: (B, S, H, P) — inputs (already multiplied by dt)
+    a: (B, S, H)    — log-decay per step (A * dt, negative)
+    b: (B, S, G, N) — input projections (dt NOT applied; folded into x)
+    c: (B, S, G, N) — output projections
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hpg = h // g                                   # heads per group
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, ac, bc, cc = map(to_chunks, (x, a, b, c))
+    ac = jnp.moveaxis(ac, -1, 2)                   # (B, nc, H, L)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xl, al, bl, cl = inp                       # (B,L,H,P),(B,H,L),(B,L,G,N)
+        a_cs = jnp.cumsum(al, axis=-1)             # (B,H,L)
+        L = jnp.exp(_segsum(al))                   # (B,H,L,L)
+        # intra-chunk (the "attention dual"): heads grouped g -> repeat
+        bl_h = jnp.repeat(bl, hpg, axis=2)         # (B,L,H,N)
+        cl_h = jnp.repeat(cl, hpg, axis=2)
+        scores = jnp.einsum("blhn,bshn->bhls", cl_h.astype(jnp.float32),
+                            bl_h.astype(jnp.float32))
+        y_diag = jnp.einsum("bhls,bhls,bshp->blhp", scores, L,
+                            xl.astype(jnp.float32))
+        # chunk-final state: state += sum_l exp(A_sum - A_cs[l]) B_l x_l
+        decay_in = jnp.exp(a_cs[..., -1:] - a_cs)  # (B,H,L)
+        new_contrib = jnp.einsum("blhn,bhl,blhp->bhpn", bl_h, decay_in,
+                                 xl.astype(jnp.float32))
+        chunk_decay = jnp.exp(a_cs[..., -1])       # (B,H)
+        # inter-chunk output: y_off[l] = C_l . (decay_to_l * state_in)
+        decay_out = jnp.exp(a_cs)                  # (B,H,L)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", cl_h, state, decay_out)
+        new_state = state * chunk_decay[..., None, None] + new_contrib
+        return new_state, (y_diag + y_off)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    final_state, ys = xscan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def _project_conv_full(params: dict, cfg: ArchConfig, u: jax.Array,
+                       init_cache: dict | None):
+    """Input projections + causal conv, fused (paper-faithful) or split
+    (§Perf TP-alignable) form.  Returns (z, x, b, c, dt, conv_caches)."""
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    dt_ = cfg.activation_dtype
+    gn = s.ngroups * s.d_state
+    if s.fused_proj:
+        zxbcdt = LN.apply_linear(params["in_proj"], u, cfg.quant, dtype=dt_)
+        z, xbc, dt = _split_zxbcdt(cfg, zxbcdt)
+        conv_init = init_cache["conv"] if init_cache else None
+        xbc, conv_state = _conv1d(xbc.astype(jnp.float32),
+                                  params["conv_w"], params["conv_b"],
+                                  conv_init)
+        xbc = jax.nn.silu(xbc)
+        x, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+        return z, x, b, c, dt, {"conv": conv_state}
+    z = LN.apply_linear(params["z_proj"], u, cfg.quant, dtype=dt_)
+    dt = LN.apply_linear(params["dt_proj"], u, cfg.quant, dtype=dt_)
+    caches = {}
+    outs = {}
+    for name, proj, cw, cb in (("x", "x_proj", "conv_w_x", "conv_b_x"),
+                               ("b", "b_proj", "conv_w_b", "conv_b_b"),
+                               ("c", "c_proj", "conv_w_c", "conv_b_c")):
+        t = LN.apply_linear(params[proj], u, cfg.quant, dtype=dt_)
+        init = init_cache[f"conv_{name}"] if init_cache else None
+        t, st = _conv1d(t.astype(jnp.float32), params[cw], params[cb],
+                        init)
+        outs[name] = jax.nn.silu(t)
+        caches[f"conv_{name}"] = st
+    return z, outs["x"], outs["b"], outs["c"], dt, caches
+
+
+def mamba2_forward(params: dict, cfg: ArchConfig, u: jax.Array, *,
+                   init_cache: dict | None = None, return_cache: bool = False):
+    """Full-sequence forward.  u: (B, S, D) -> (B, S, D)."""
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    dt_ = cfg.activation_dtype
+    bsz, slen, _ = u.shape
+    z, x, b, c, dt, conv_caches = _project_conv_full(params, cfg, u,
+                                                     init_cache)
+    x = x.reshape(bsz, slen, nheads, s.head_dim)
+    b = b.reshape(bsz, slen, s.ngroups, s.d_state)
+    c = c.reshape(bsz, slen, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                   # (H,), negative
+    pad = (-slen) % s.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    ssm_init = init_cache["state"] if init_cache else None
+    y, state = ssd_chunked(x * dt[..., None], a * dt, b, c, s.chunk,
+                           init_state=ssm_init)
+    y = y[:, :slen]
+    x = x[:, :slen]
+    y = y + x.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(bsz, slen, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = C.apply_rmsnorm(params.get("norm", params.get("norm_tp")),
+                        y.astype(dt_))
+    out = LN.apply_linear(params.get("out_proj",
+                                     params.get("out_proj_tp")), y,
+                          cfg.quant, dtype=dt_)
+    if return_cache:
+        return out, {**conv_caches, "state": state}
+    return out
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int) -> dict:
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    cache = {"state": jnp.zeros((batch, nheads, s.head_dim, s.d_state),
+                                jnp.float32)}
+    if s.fused_proj:
+        cache["conv"] = jnp.zeros((batch, s.d_conv - 1, conv_dim),
+                                  jnp.float32)
+    else:
+        cache["conv_x"] = jnp.zeros((batch, s.d_conv - 1, d_inner),
+                                    jnp.float32)
+        cache["conv_b"] = jnp.zeros((batch, s.d_conv - 1, gn), jnp.float32)
+        cache["conv_c"] = jnp.zeros((batch, s.d_conv - 1, gn), jnp.float32)
+    return cache
+
+
+def mamba2_decode(params: dict, cfg: ArchConfig, u: jax.Array, cache: dict):
+    """Single-token recurrence.  u: (B, 1, D).  O(1) state update:
+
+    state = state * exp(dt*A) + dt * B x;  y = C . state + D x."""
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    dt_ = cfg.activation_dtype
+    bsz = u.shape[0]
+    gn = s.ngroups * s.d_state
+    new_caches = {}
+    if s.fused_proj:
+        zxbcdt = LN.apply_linear(params["in_proj"], u, cfg.quant, dtype=dt_)
+        z, xbc, dt = _split_zxbcdt(cfg, zxbcdt)
+        xbc = xbc.astype(jnp.float32)
+        conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)
+        y_conv = (conv_in * params["conv_w"][None]).sum(
+            axis=1, keepdims=True) + params["conv_b"]
+        new_caches["conv"] = conv_in[:, 1:, :]
+        xbc1 = jax.nn.silu(y_conv)[:, 0]            # (B, conv_dim)
+        x, b, c = jnp.split(xbc1, [d_inner, d_inner + gn], axis=-1)
+    else:
+        z = LN.apply_linear(params["z_proj"], u, cfg.quant, dtype=dt_)
+        dt = LN.apply_linear(params["dt_proj"], u, cfg.quant, dtype=dt_)
+        parts = {}
+        for name, proj, cw, cb in (("x", "x_proj", "conv_w_x",
+                                    "conv_b_x"),
+                                   ("b", "b_proj", "conv_w_b",
+                                    "conv_b_b"),
+                                   ("c", "c_proj", "conv_w_c",
+                                    "conv_b_c")):
+            t = LN.apply_linear(params[proj], u, cfg.quant,
+                                dtype=dt_).astype(jnp.float32)
+            conv_in = jnp.concatenate([cache[f"conv_{name}"], t], axis=1)
+            y_conv = (conv_in * params[cw][None]).sum(
+                axis=1, keepdims=True) + params[cb]
+            new_caches[f"conv_{name}"] = conv_in[:, 1:, :]
+            parts[name] = jax.nn.silu(y_conv)[:, 0]
+        x, b, c = parts["x"], parts["b"], parts["c"]
+    x = x.reshape(bsz, nheads, s.head_dim)
+    b = b.reshape(bsz, s.ngroups, s.d_state)
+    c = c.reshape(bsz, s.ngroups, s.d_state)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * a)                        # (B, H)
+    hpg = nheads // s.ngroups
+    b_h = jnp.repeat(b, hpg, axis=1)                # (B, H, N)
+    c_h = jnp.repeat(c, hpg, axis=1)
+    dx = (dt1[..., None] * x)                       # (B, H, P)
+    new_state = cache["state"] * decay[..., None, None] \
+        + jnp.einsum("bhp,bhn->bhpn", dx, b_h)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h) \
+        + x * params["D"][:, None]
+    y = y.reshape(bsz, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = C.apply_rmsnorm(params.get("norm", params.get("norm_tp")),
+                        y.astype(dt_))
+    out = LN.apply_linear(params.get("out_proj",
+                                     params.get("out_proj_tp")), y,
+                          cfg.quant, dtype=dt_)
+    return out, {**new_caches, "state": new_state}

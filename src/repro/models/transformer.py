@@ -1,0 +1,262 @@
+"""Decoder-stack assembly: pattern-segmented, scan-stacked layers.
+
+Depth is folded into ``lax.scan`` over *layer groups* so HLO size and
+compile time are O(1) in depth (MaxText-style).  A group is one pass
+through ``cfg.attention_pattern`` (e.g. gemma-2's ("local", "global"),
+recurrentgemma's ("rec", "rec", "attn")); leftover layers that do not
+fill a full period form a trailing segment.
+
+Layer kinds: 'global' | 'local' (attention), 'rec' (RG-LRU), 'ssm'
+(Mamba-2).  Every kind except 'ssm' is followed by an FFN/MoE sub-block
+(Mamba-2 blocks are the whole layer, d_ff == 0).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import common as C
+from repro.models import ffn as F
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.utils import tree as T
+from repro.utils.flags import xscan
+
+
+def segments_of(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, n_groups), ...] covering exactly num_layers layers."""
+    period = cfg.pattern_period
+    n_full, leftover = divmod(cfg.num_layers, period)
+    segs: list[tuple[tuple[str, ...], int]] = []
+    if n_full:
+        segs.append((cfg.attention_pattern, n_full))
+    if leftover:
+        segs.append((cfg.attention_pattern[:leftover], 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _has_ffn(cfg: ArchConfig, kind: str) -> bool:
+    return kind != "ssm" and (cfg.d_ff > 0 or cfg.moe is not None)
+
+
+def init_layer(key: jax.Array, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": C.init_norm(cfg.norm_type, cfg.d_model)}
+    if kind in ("global", "local"):
+        p["attn"] = A.init_attention(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = R.init_rglru_block(ks[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = S.init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        p["ln2"] = C.init_norm(cfg.norm_type, cfg.d_model)
+        p["mlp"] = (M.init_moe(ks[1], cfg) if cfg.moe is not None
+                    else F.init_ffn(ks[1], cfg))
+    return p
+
+
+def apply_layer(params: dict, cfg: ArchConfig, kind: str, x: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    h = C.apply_norm(cfg.norm_type, params["ln1"], x)
+    if kind in ("global", "local"):
+        mix = A.attention_forward(params["attn"], cfg, h,
+                                  positions=positions, kind=kind)
+    elif kind == "rec":
+        mix = R.rglru_block_forward(params["rec"], cfg, h)
+    else:
+        mix = S.mamba2_forward(params["ssm"], cfg, h)
+    x = x + mix
+    if "mlp" in params:
+        h2 = C.apply_norm(cfg.norm_type, params["ln2"], x)
+        y = (M.apply_moe(params["mlp"], cfg, h2) if cfg.moe is not None
+             else F.apply_ffn(params["mlp"], cfg, h2))
+        x = x + y
+    return x
+
+
+# ---------------------------------------------------------------------------
+# stack init / forward
+# ---------------------------------------------------------------------------
+
+def init_stack(key: jax.Array, cfg: ArchConfig) -> list:
+    """Returns a list of segments; each segment is a tuple (one entry per
+    pattern position) of pytrees stacked over the segment's groups."""
+    stack = []
+    base = 0
+    for pattern, n in segments_of(cfg):
+        seg = []
+        for pos, kind in enumerate(pattern):
+            layers = [
+                init_layer(jax.random.fold_in(key,
+                                              base + g * len(pattern) + pos),
+                           cfg, kind)
+                for g in range(n)
+            ]
+            seg.append(T.tree_stack(layers))
+        base += n * len(pattern)
+        stack.append(tuple(seg))
+    return stack
+
+
+def stack_forward(stack: list, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array, *, remat: bool = True) -> jax.Array:
+    for (pattern, n), seg_params in zip(segments_of(cfg), stack):
+
+        def group_body(h, group_params, _pattern=pattern):
+            for pos, kind in enumerate(_pattern):
+                h = apply_layer(group_params[pos], cfg, kind, h, positions)
+            return h, None
+
+        body = group_body
+        if remat:
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = xscan(body, x, seg_params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# caches (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> list:
+    """Cache pytree mirroring the stack segmentation."""
+    cache = []
+    for pattern, n in segments_of(cfg):
+        seg = []
+        for kind in pattern:
+            if kind in ("global", "local"):
+                one = A.init_attn_cache(cfg, batch, max_len, kind)
+            elif kind == "rec":
+                one = R.init_rglru_cache(cfg, batch)
+            else:
+                one = S.init_mamba2_cache(cfg, batch)
+            seg.append(T.tree_stack([one] * n))
+        cache.append(tuple(seg))
+    return cache
+
+
+def apply_layer_decode(params: dict, cfg: ArchConfig, kind: str,
+                       x: jax.Array, cache: dict, idx: jax.Array):
+    h = C.apply_norm(cfg.norm_type, params["ln1"], x)
+    if kind in ("global", "local"):
+        mix, new_cache = A.attention_decode(params["attn"], cfg, h, cache,
+                                            idx, kind=kind)
+    elif kind == "rec":
+        mix, new_cache = R.rglru_block_decode(params["rec"], cfg, h, cache)
+    else:
+        mix, new_cache = S.mamba2_decode(params["ssm"], cfg, h, cache)
+    x = x + mix
+    if "mlp" in params:
+        h2 = C.apply_norm(cfg.norm_type, params["ln2"], x)
+        y = (M.apply_moe(params["mlp"], cfg, h2) if cfg.moe is not None
+             else F.apply_ffn(params["mlp"], cfg, h2))
+        x = x + y
+    return x, new_cache
+
+
+def stack_decode(stack: list, cache: list, cfg: ArchConfig, x: jax.Array,
+                 idx: jax.Array):
+    """One-token decode through the whole stack.  x: (B, 1, D)."""
+    new_cache_all = []
+    for (pattern, n), seg_params, seg_cache in zip(segments_of(cfg), stack,
+                                                   cache):
+
+        def group_body(h, inp, _pattern=pattern):
+            group_params, group_cache = inp
+            new_caches = []
+            for pos, kind in enumerate(_pattern):
+                h, nc = apply_layer_decode(group_params[pos], cfg, kind, h,
+                                           group_cache[pos], idx)
+                new_caches.append(nc)
+            return h, tuple(new_caches)
+
+        x, new_seg_cache = xscan(group_body, x,
+                                 (seg_params, seg_cache))
+        new_cache_all.append(new_seg_cache)
+    return x, new_cache_all
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence -> caches + last hidden)
+# ---------------------------------------------------------------------------
+
+def _ring_from_full(k: jax.Array, window: int) -> jax.Array:
+    """Convert full-sequence K/V (B, S, ...) to the decode ring layout.
+
+    Works for value tensors (B, S, H, D) and scale tensors (B, S, H)."""
+    bsz, s = k.shape[:2]
+    w = min(window, s)
+    k_last = k[:, s - w:]
+    slots = (s - w + jnp.arange(w)) % window
+    ring = jnp.zeros((bsz, window, *k.shape[2:]), k.dtype)
+    return ring.at[:, slots].set(k_last)
+
+
+def apply_layer_prefill(params: dict, cfg: ArchConfig, kind: str,
+                        x: jax.Array, positions: jax.Array, max_len: int):
+    h = C.apply_norm(cfg.norm_type, params["ln1"], x)
+    if kind in ("global", "local"):
+        mix, (k, v) = A.attention_forward(params["attn"], cfg, h,
+                                          positions=positions, kind=kind,
+                                          return_kv=True)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = A._kv_quantize(k)
+            vq, vs = A._kv_quantize(v)
+            parts = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            parts = {"k": k, "v": v}
+        if kind == "local":
+            size = min(max_len, cfg.window_size)
+            new_cache = {n: _ring_from_full(t, size)
+                         for n, t in parts.items()}
+        else:
+            new_cache = {}
+            for n, t in parts.items():
+                pad = [(0, 0), (0, max_len - t.shape[1])] \
+                    + [(0, 0)] * (t.ndim - 2)
+                new_cache[n] = jnp.pad(t, pad)
+    elif kind == "rec":
+        mix, new_cache = R.rglru_block_forward(params["rec"], cfg, h,
+                                               return_cache=True)
+    else:
+        mix, new_cache = S.mamba2_forward(params["ssm"], cfg, h,
+                                          return_cache=True)
+    x = x + mix
+    if "mlp" in params:
+        h2 = C.apply_norm(cfg.norm_type, params["ln2"], x)
+        y = (M.apply_moe(params["mlp"], cfg, h2) if cfg.moe is not None
+             else F.apply_ffn(params["mlp"], cfg, h2))
+        x = x + y
+    return x, new_cache
+
+
+def stack_prefill(stack: list, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array, max_len: int):
+    cache_all = []
+    for (pattern, n), seg_params in zip(segments_of(cfg), stack):
+
+        def group_body(h, group_params, _pattern=pattern):
+            caches = []
+            for pos, kind in enumerate(_pattern):
+                h, c = apply_layer_prefill(group_params[pos], cfg, kind, h,
+                                           positions, max_len)
+                caches.append(c)
+            return h, tuple(caches)
+
+        x, seg_cache = xscan(group_body, x, seg_params)
+        cache_all.append(seg_cache)
+    return x, cache_all

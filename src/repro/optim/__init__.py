@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import signsgd_ef_init, signsgd_ef_compress
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "signsgd_ef_init", "signsgd_ef_compress", "cosine_schedule"]

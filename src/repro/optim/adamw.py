@@ -1,0 +1,62 @@
+"""AdamW with fp32 master weights + binary-latent clipping (paper §4.4).
+
+The paper trains BDNNs by accumulating gradients into full-precision
+latent weights, clipping them to [-1, 1] so the fp values stay in the
+range where sign() is informative.  ``adamw_update`` applies that clip to
+every leaf whose path is a quantized Linear when ``clip_latent`` is on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    clip_latent: bool = False      # binary mode: clip latents to [-1, 1]
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros(), "nu": zeros(),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    step = state["step"] + 1
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"],
+                      grads)
+    mu_hat_s = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+    nu_hat_s = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+    lr = cfg.lr * lr_scale
+
+    def upd(p, m, v):
+        u = (m * mu_hat_s) / (jnp.sqrt(v * nu_hat_s) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (u + cfg.weight_decay
+                                             * p.astype(jnp.float32))
+        if cfg.clip_latent:
+            newp = jnp.clip(newp, -1.0, 1.0)
+        return newp.astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, gn

@@ -1,0 +1,13 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10000,
+                    floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * (floor + (1 - floor) * cos)

@@ -1,0 +1,39 @@
+"""Elastic scaling: re-mesh on device-set change.
+
+When a pod is lost (or added), the job restarts on a different device
+count.  ``remesh_plan`` recomputes the largest valid (data, model) mesh
+for the survivors under the constraint that the model-parallel degree is
+preserved when possible (weights reshard cheaply along data/FSDP; moving
+the TP axis means a full re-layout).  ``load_checkpoint`` with new
+shardings performs the actual reshard (checkpointer docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    def build(self, devices=None) -> Mesh:
+        return jax.make_mesh(self.shape, self.axes,
+                             devices=devices) if devices is not None else \
+            jax.make_mesh(self.shape, self.axes)
+
+
+def remesh_plan(n_devices: int, *, prefer_model: int,
+                min_model: int = 1) -> MeshPlan:
+    """Largest (data, model) factorization of n_devices keeping model
+    parallel degree at ``prefer_model`` when it divides, else the largest
+    power-of-two divisor >= min_model."""
+    model = prefer_model
+    while model > min_model and n_devices % model:
+        model //= 2
+    model = max(model, min_model)
+    data = n_devices // model
+    return MeshPlan((data, model), ("data", "model"))

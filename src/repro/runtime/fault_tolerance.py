@@ -1,0 +1,118 @@
+"""Fault tolerance: supervised training loop with checkpoint/restart,
+
+heartbeats, and deadline-based straggler mitigation.
+
+This container is single-host, so failures are *injected* (exceptions /
+simulated slow steps); the control flow is the multi-host shape:
+
+  Supervisor.run():
+    restore latest checkpoint (if any) -> loop:
+      step with deadline -> heartbeat -> periodic async checkpoint
+    on StepFailure: restart from last checkpoint (elastic: the restore
+    path reshards, so the post-restart mesh may differ)
+
+Straggler mitigation: a step exceeding ``deadline_factor x`` the rolling
+median is recorded and (in the simulated runner) re-dispatched once —
+the bounded-retry analogue of backup tasks (MapReduce-style speculative
+execution adapted to synchronous SPMD: in a real pod this is "replace
+the slow host and re-join", here it is re-running the step closure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              load_checkpoint)
+
+
+class StepFailure(RuntimeError):
+    """Raised by a step function to simulate a node failure."""
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 10
+    deadline_factor: float = 3.0
+    min_deadline_s: float = 0.5
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_done: int = 0
+    restarts: int = 0
+    stragglers_redispatched: int = 0
+    heartbeats: int = 0
+
+
+class Supervisor:
+    """Runs ``step_fn(state, step_idx) -> state, metrics`` with restart.
+
+    ``state`` must be a pytree checkpointable by repro.checkpoint.
+    """
+
+    def __init__(self, cfg: SupervisorConfig, init_state_fn: Callable,
+                 step_fn: Callable, shardings=None):
+        self.cfg = cfg
+        self.init_state_fn = init_state_fn
+        self.step_fn = step_fn
+        self.shardings = shardings
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir)
+        self.report = SupervisorReport()
+        self._durations: list[float] = []
+
+    def _restore_or_init(self):
+        step = latest_step(self.cfg.ckpt_dir)
+        state = self.init_state_fn()
+        if step is None:
+            return state, 0
+        state, meta = load_checkpoint(self.cfg.ckpt_dir, step, state,
+                                      self.shardings)
+        return state, int(meta["step"]) + 1
+
+    def _deadline(self) -> float:
+        if not self._durations:
+            return float("inf")
+        med = sorted(self._durations)[len(self._durations) // 2]
+        return max(self.cfg.min_deadline_s,
+                   self.cfg.deadline_factor * med)
+
+    def run(self, num_steps: int) -> tuple:
+        restarts = 0
+        while True:
+            state, start = self._restore_or_init()
+            try:
+                for i in range(start, num_steps):
+                    t0 = time.monotonic()
+                    deadline = self._deadline()
+                    try:
+                        state, metrics = self.step_fn(state, i)
+                    except StepFailure:
+                        raise
+                    dt = time.monotonic() - t0
+                    if dt > deadline:
+                        # straggler: bounded speculative re-dispatch
+                        self.report.stragglers_redispatched += 1
+                        t0 = time.monotonic()
+                        state, metrics = self.step_fn(state, i)
+                        dt = time.monotonic() - t0
+                    self._durations.append(dt)
+                    if len(self._durations) > 64:
+                        self._durations.pop(0)
+                    self.report.heartbeats += 1
+                    self.report.steps_done = i + 1
+                    if (i + 1) % self.cfg.ckpt_every == 0:
+                        self.ckpt.save(i, state)
+                self.ckpt.wait()
+                self.report.restarts = restarts
+                return state, self.report
+            except StepFailure:
+                restarts += 1
+                self.report.restarts = restarts
+                if restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                continue

@@ -1,0 +1,105 @@
+"""Serving: prefill / decode step factories + a batched request loop.
+
+``make_decode_step`` is the function the decode_32k / long_500k dry-run
+cells lower: one new token for the whole batch against a seq_len KV
+cache.  The server loop demonstrates continuous batching at the Python
+level (slot reuse on completion) — the per-step compute is the jitted
+decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, tokens, idx):
+        return M.decode_step(params, cfg, tokens, cache, idx)
+    return decode_step
+
+
+def make_forward(cfg: ArchConfig):
+    def fwd(params, batch):
+        return M.loss_fn(params, cfg, batch)
+    return fwd
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jax.Array          # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+class BatchedServer:
+    """Minimal continuous-batching server over the jitted decode step.
+
+    All sequences share one ring of decode slots; finished requests free
+    their slot for the next queued prompt.  Single-host demo driver for
+    examples/serve_binary_lm.py — the distributed serving path is the
+    jitted step itself (launch/serve.py).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int,
+                 max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.cache = M.init_cache(params, cfg, batch_slots, max_len)
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.active: dict[int, Request] = {}
+        self.idx = 0
+
+    def submit_and_run(self, requests: list[Request]) -> list[Request]:
+        """Greedy decode all requests (prompts are consumed token-by-token
+        — teacher-forcing the prompt through the decode path keeps this
+        driver cache-layout agnostic)."""
+        queue = list(requests)
+        done: list[Request] = []
+        slot_req: dict[int, Request] = {}
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = [0] * self.slots
+        while queue or slot_req:
+            for s in range(self.slots):
+                if s not in slot_req and queue:
+                    slot_req[s] = queue.pop(0)
+                    pos[s] = 0
+            step_tok = []
+            for s in range(self.slots):
+                r = slot_req.get(s)
+                if r is None:
+                    step_tok.append(0)
+                elif pos[s] < len(r.prompt):
+                    step_tok.append(int(r.prompt[pos[s]]))
+                else:
+                    step_tok.append(r.out[-1] if r.out else 0)
+            tok = jnp.asarray(step_tok, jnp.int32)[:, None]
+            logits, self.cache = self.decode(self.params, self.cache, tok,
+                                             jnp.int32(self.idx))
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+            for s in list(slot_req):
+                r = slot_req[s]
+                pos[s] += 1
+                if pos[s] >= len(r.prompt):
+                    r.out.append(int(nxt[s]))
+                    if len(r.out) >= r.max_new:
+                        done.append(r)
+                        del slot_req[s]
+            self.idx += 1
+            if self.idx >= self.max_len:
+                break
+        return done

@@ -1,0 +1,47 @@
+"""Analysis-mode flag: unroll every sequential scan so the compiled HLO
+
+carries the TRUE op counts.  XLA's HloCostAnalysis visits a while-loop
+body ONCE, so a scanned program under-reports FLOPs/bytes by the trip
+count; for §Roofline we re-lower the cell with ``analysis_mode()`` active
+and every ``xscan`` fully unrolled (and every collective materialized per
+layer).  Compile is slower — used for the roofline cells, not the 40-cell
+lowering sweep.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_ANALYSIS = contextvars.ContextVar("repro_analysis_mode", default=False)
+
+
+def in_analysis_mode() -> bool:
+    return _ANALYSIS.get()
+
+
+@contextlib.contextmanager
+def analysis_mode(on: bool = True):
+    tok = _ANALYSIS.set(on)
+    try:
+        yield
+    finally:
+        _ANALYSIS.reset(tok)
+
+
+def xscan(f, init, xs, length: int | None = None):
+    """lax.scan that fully unrolls in analysis mode."""
+    if in_analysis_mode():
+        return jax.lax.scan(f, init, xs, length=length, unroll=True)
+    return jax.lax.scan(f, init, xs, length=length)
+
+
+def xmap_seq(f, xs):
+    """Sequential map (lax.map) that unrolls in analysis mode."""
+    if in_analysis_mode():
+        def body(carry, x):
+            return carry, f(x)
+        _, ys = jax.lax.scan(body, None, xs, unroll=True)
+        return ys
+    return jax.lax.map(f, xs)

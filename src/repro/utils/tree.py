@@ -1,0 +1,32 @@
+"""Pytree helpers for scan-stacked layer parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_stack(trees: list):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree, i: int):
+    """Static-index axis 0 of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_dynamic_index(tree, i):
+    """Dynamic-index axis 0 of every leaf (traced index)."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+        tree)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+def tree_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree) if hasattr(x, "size"))

@@ -1,0 +1,134 @@
+"""Attention unit tests: chunked online-softmax vs naive reference,
+
+masks (causal / sliding window), GQA grouping, softcap, RoPE variants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import common as C
+
+settings = hypothesis.settings(max_examples=15, deadline=None)
+
+
+def naive_attention(q, k, v, *, causal, window=None, softcap=None,
+                    q_offset=0):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * d ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = q_offset + jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o
+
+
+def _qkv(key, b, sq, skv, hq, hkv, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, hq, d), dtype)
+    k = jax.random.normal(k2, (b, skv, hkv, d), dtype)
+    v = jax.random.normal(k3, (b, skv, hkv, d), dtype)
+    return q, k, v
+
+
+@settings
+@hypothesis.given(sq=st.integers(1, 33), hkv=st.sampled_from([1, 2, 4]),
+                  g=st.sampled_from([1, 2, 3]),
+                  causal=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_chunked_vs_naive(sq, hkv, g, causal, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 2, sq, sq, hkv * g, hkv, 8)
+    want = naive_attention(q, k, v, causal=causal)
+    got = A.chunked_attention(q, k, v, causal=causal, q_chunk=8,
+                              kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings
+@hypothesis.given(window=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_sliding_window(window, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, 20, 20, 4, 2, 8)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    got = A.chunked_attention(q, k, v, causal=True, window=window,
+                              q_chunk=8, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_softcap():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 1, 9, 9, 2, 2, 8)
+    want = naive_attention(q, k, v, causal=True, softcap=5.0)
+    got = A.chunked_attention(q, k, v, causal=True, attn_softcap=5.0,
+                              q_chunk=4, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_q_offset_continuation():
+    """Chunked attention with q_offset == suffix of the full result."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 16, 16, 2, 1, 8)
+    full = A.chunked_attention(q, k, v, causal=True)
+    part = A.chunked_attention(q[:, 12:], k, v, causal=True, q_offset=12)
+    np.testing.assert_allclose(np.asarray(part), np.asarray(full[:, 12:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunk_size_invariance():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 30, 30, 4, 2, 16)
+    a = A.chunked_attention(q, k, v, causal=True, q_chunk=5, kv_chunk=7)
+    b = A.chunked_attention(q, k, v, causal=True, q_chunk=30, kv_chunk=30)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ------------------------------- RoPE --------------------------------------
+
+def test_mrope_reduces_to_rope_for_text():
+    """qwen2-vl M-RoPE with t==h==w positions == standard RoPE."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 10, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+    want = C.apply_rope(x, pos)
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 10))
+    got = C.apply_mrope(x, pos3, sections=(8, 12, 12))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_partial_rope_passthrough():
+    """chatglm partial rotary: the non-rotated half passes through."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 2, 16))
+    pos = jnp.arange(5)[None]
+    y = C.apply_rope(x, pos, fraction=0.5)
+    np.testing.assert_allclose(np.asarray(y[..., 8:]),
+                               np.asarray(x[..., 8:]), rtol=1e-6, atol=0)
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative positions."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, d))
+
+    def score(pq, pk):
+        qr = C.apply_rope(q, jnp.array([[pq]]))
+        kr = C.apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(3, 1) - score(10, 8)) < 1e-3
+    assert abs(score(5, 5) - score(100, 100)) < 1e-3

@@ -1,0 +1,105 @@
+"""Unit + property tests for the core binarization primitives (paper §4)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize as B
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 7), k=st.integers(1, 300),
+                  seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(m, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    packed = B.pack_bits(x)
+    assert packed.shape == (m, B.packed_width(k))
+    assert packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(B.unpack_bits(packed, k)),
+                                  np.asarray(B.sign_pm1(x)))
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 9), k=st.integers(1, 200),
+                  n=st.integers(1, 9), seed=st.integers(0, 2**31 - 1))
+def test_packed_matmul_identity(m, k, n, seed):
+    """Paper eq. 2:  a.b == K - 2*popcount(xor) on packed words."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (m, k))
+    b = jax.random.normal(kb, (n, k))
+    want = jnp.dot(B.sign_pm1(a), B.sign_pm1(b).T).astype(jnp.int32)
+    got = B.packed_matmul(B.pack_bits(a), B.pack_bits(b), k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 5), k=st.integers(64, 400),
+                  n=st.integers(1, 5), blk=st.integers(1, 4),
+                  seed=st.integers(0, 2**31 - 1))
+def test_packed_matmul_chunked_contraction(m, k, n, blk, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (m, k))
+    b = jax.random.normal(kb, (n, k))
+    full = B.packed_matmul(B.pack_bits(a), B.pack_bits(b), k)
+    chunked = B.packed_matmul(B.pack_bits(a), B.pack_bits(b), k,
+                              block_kw=blk)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(chunked))
+
+
+def test_packed_matmul_batched_lead_dims():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (3, 4, 100))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (7, 100))
+    got = B.packed_matmul(B.pack_bits(a), B.pack_bits(b), 100)
+    want = jnp.einsum("bmk,nk->bmn", B.sign_pm1(a),
+                      B.sign_pm1(b)).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ste_gradient_window():
+    """STE (paper §4.4): grad passes iff |x| <= 1."""
+    x = jnp.array([-2.0, -1.0, -0.3, 0.0, 0.7, 1.0, 1.5])
+    g = jax.grad(lambda v: B.binarize_ste(v).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.array([0, 1, 1, 1, 1, 1, 0],
+                                           np.float32))
+
+
+def test_sign_zero_is_positive():
+    assert float(B.sign_pm1(jnp.array(0.0))) == 1.0
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 6), k=st.integers(1, 120),
+                  n=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_bitplane_dot_exact(m, k, n, seed):
+    """Paper §4.3 (exact form): bit-plane decomposition reproduces the
+    integer GEMM of uint8 inputs against ±1 weights exactly."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (m, k), 0, 256).astype(jnp.uint8)
+    w = B.sign_pm1(jax.random.normal(kw, (n, k)))
+    want = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32).T)
+    got = B.bitplane_dot(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_unpack_equals_xnor_path():
+    """DESIGN.md §2: the two GEMM strategies are numerically identical."""
+    key = jax.random.PRNGKey(3)
+    a = B.sign_pm1(jax.random.normal(key, (5, 96)))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (9, 96))
+    bp = B.pack_bits(b)
+    vpu = B.packed_matmul(B.pack_bits(a), bp, 96)
+    mxu = B.binary_dot_unpacked_mxu(a, bp, 96, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(vpu),
+                                  np.asarray(mxu).astype(np.int32))
+
+
+def test_clip_latent():
+    w = jnp.array([-3.0, -0.5, 0.5, 3.0])
+    np.testing.assert_array_equal(np.asarray(B.clip_latent(w)),
+                                  np.array([-1, -0.5, 0.5, 1], np.float32))

@@ -1,0 +1,101 @@
+"""Binary layer tests: pad-correction identity (C5), BN-fold, packed conv."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize as B
+from repro.core import binary_layers as L
+from repro.kernels import ops as kops
+
+settings = hypothesis.settings(max_examples=15, deadline=None)
+
+
+def _pack_act(x_pm1):
+    p = kops.bitpack(x_pm1.reshape(-1, x_pm1.shape[-1]), backend="jnp")
+    return p.reshape(*x_pm1.shape[:-1], -1)
+
+
+@settings
+@hypothesis.given(h=st.integers(4, 10), c_in=st.integers(1, 40),
+                  c_out=st.integers(1, 8), stride=st.sampled_from([1, 2]),
+                  seed=st.integers(0, 2**31 - 1))
+def test_conv_pad_correction_identity(h, c_in, c_out, stride, seed):
+    """Paper §5.2: packed conv (pad treated as -1) + correction matrix ==
+    true zero-padded conv, exactly."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (2, h, h, c_in))
+    params = L.init_binary_conv2d(kw, 3, 3, c_in, c_out)
+    want = L.apply_binary_conv2d_float(params, x, stride=stride,
+                                       padding="SAME")
+    packed = L.pack_binary_conv2d(params, input_hw=(h, h), stride=stride,
+                                  padding="SAME")
+    got = L.apply_binary_conv2d_packed(packed, _pack_act(B.sign_pm1(x)),
+                                       backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).astype(np.int32))
+
+
+def test_conv_valid_padding():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 8, 16))
+    params = L.init_binary_conv2d(jax.random.fold_in(key, 1), 3, 3, 16, 4)
+    want = L.apply_binary_conv2d_float(params, x, padding="VALID")
+    packed = L.pack_binary_conv2d(params, input_hw=(8, 8), padding="VALID")
+    got = L.apply_binary_conv2d_packed(packed, _pack_act(B.sign_pm1(x)),
+                                       backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).astype(np.int32))
+
+
+@settings
+@hypothesis.given(c=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_bn_sign_fold(c, seed):
+    """fold_bn_sign: threshold compare == sign(BN(x)) for continuous x."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    bn = {
+        "gamma": jax.random.uniform(ks[0], (c,), minval=0.2, maxval=2.0)
+        * jnp.where(jax.random.bernoulli(ks[4], 0.4, (c,)), -1.0, 1.0),
+        "beta": jax.random.normal(ks[1], (c,)),
+        "mean": jax.random.normal(ks[2], (c,)) * 5,
+        "var": jax.random.uniform(ks[3], (c,), minval=0.1, maxval=3.0),
+    }
+    x = jax.random.normal(jax.random.fold_in(ks[0], 9), (17, c)) * 10
+    want = B.sign_pm1(L.apply_batchnorm(bn, x))
+    got = L.apply_bn_sign_folded(L.fold_bn_sign(bn), x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitplane_dense_packed_exact():
+    key = jax.random.PRNGKey(1)
+    params = L.init_binary_dense(key, 50, 12)
+    x = jax.random.randint(jax.random.fold_in(key, 2), (6, 50), 0,
+                           256).astype(jnp.uint8)
+    want = L.apply_bitplane_dense_float(params, x)
+    packed = L.pack_bitplane_dense(params)
+    got = L.apply_bitplane_dense_packed(packed, x, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).astype(np.int32))
+
+
+def test_binary_dense_packed_exact():
+    key = jax.random.PRNGKey(2)
+    params = L.init_binary_dense(key, 70, 9)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 70))
+    want = L.apply_binary_dense_float(params, x)
+    got = L.apply_binary_dense_packed(L.pack_binary_dense(params), x,
+                                      backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).astype(np.int32))
+
+
+def test_maxpool_int_and_float():
+    x = jnp.arange(16, dtype=jnp.int32).reshape(1, 4, 4, 1)
+    y = L.maxpool2d(x, 2)
+    np.testing.assert_array_equal(np.asarray(y[0, :, :, 0]),
+                                  np.array([[5, 7], [13, 15]]))
+    xf = x.astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(L.maxpool2d(xf, 2)),
+                                  np.asarray(y).astype(np.float32))

@@ -1,0 +1,92 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU).
+
+Every kernel: shapes x dtypes, bit-exact against ref.py.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize as B
+from repro.kernels import binary_matmul as BMM
+from repro.kernels import bitpack as BP
+from repro.kernels import ops, ref
+
+settings = hypothesis.settings(max_examples=20, deadline=None)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 64, 128),        # GEMV specialization (paper §6.2 batch-1 swap)
+    (8, 256, 256),
+    (16, 1000, 100),     # non-aligned K and N -> padding path
+    (33, 4096, 65),
+    (128, 8192, 128),    # one full tile in every dim
+    (130, 131, 257),     # everything ragged
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_binary_matmul_shapes(m, k, n, dtype):
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    a = jax.random.normal(key, (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, k)).astype(dtype)
+    want = ref.binary_matmul_ref(a, b)
+    got = ops.binary_matmul(a, b, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 40), kw_mult=st.integers(1, 6),
+                  n=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_binary_matmul_property(m, kw_mult, n, seed):
+    k = kw_mult * 32 + (seed % 31)
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (m, k))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    got = BMM.binary_matmul_packed(B.pack_bits(a), B.pack_bits(b),
+                                   k_true=k, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.binary_matmul_ref(a, b)))
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 128), (16, 256, 128),
+                                    (128, 128, 256)])
+def test_binary_matmul_block_shape_invariance(blocks):
+    """Output must not depend on the BlockSpec tiling."""
+    bm, bn, bkw = blocks
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (50, 5000))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (70, 5000))
+    want = ref.binary_matmul_ref(a, b)
+    got = BMM.binary_matmul_packed(B.pack_bits(a), B.pack_bits(b),
+                                   k_true=5000, block_m=bm, block_n=bn,
+                                   block_kw=bkw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k", [(1, 32), (8, 4096), (20, 100), (256, 8192),
+                                 (3, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitpack_shapes(m, k, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(k + m), (m, k)).astype(dtype)
+    got = BP.bitpack(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.bitpack_ref(x)))
+
+
+@settings
+@hypothesis.given(m=st.integers(1, 30), k=st.integers(1, 500),
+                  seed=st.integers(0, 2**31 - 1))
+def test_bitpack_property(m, k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    got = BP.bitpack(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.bitpack_ref(x)))
+
+
+def test_ops_auto_backend_cpu_is_jnp():
+    a = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    np.testing.assert_array_equal(
+        np.asarray(ops.binary_matmul(a, b, backend="auto")),
+        np.asarray(ref.binary_matmul_ref(a, b)))

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED config of the
+
+same family — forward + one train step on CPU, asserting output shapes
+and no NaNs.  Full configs are exercised only via the dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import model as M
+from repro.train import trainer as TR
+
+ARCHS = list(list_configs())
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                                jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = M.init_model(key, cfg)
+    batch = _batch(cfg, key)
+    logits = M.logits_fn(params, cfg, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    tc = TR.TrainConfig(lr=1e-3, warmup=1, total_steps=10)
+    key = jax.random.PRNGKey(1)
+    state = TR.init_train_state(key, cfg, tc)
+    step = jax.jit(TR.make_train_step(cfg, tc))
+    batch = _batch(cfg, key)
+    state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually changed
+    before = jax.tree.leaves(TR.init_train_state(key, cfg, tc)["params"])
+    after = jax.tree.leaves(state["params"])
+    changed = any(not np.allclose(np.asarray(a), np.asarray(b))
+                  for a, b in zip(after, before))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-3b", "qwen3-moe-30b-a3b"])
+def test_binary_quant_train_step(arch):
+    """The paper's technique as an LM feature: binary train step runs and
+    clips latents to [-1, 1] (paper §4.4)."""
+    cfg = get_config(arch, quant="binary", reduced=True)
+    tc = TR.TrainConfig(lr=1e-2, warmup=1, total_steps=10)
+    key = jax.random.PRNGKey(2)
+    state = TR.init_train_state(key, cfg, tc)
+    step = jax.jit(TR.make_train_step(cfg, tc))
+    state, metrics = step(state, _batch(cfg, key))
+    assert jnp.isfinite(metrics["loss"])
+    for leaf in jax.tree.leaves(state["params"]):
+        assert float(jnp.max(jnp.abs(leaf))) <= 1.0 + 1e-6
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (spot checks)."""
+    c = get_config("nemotron-4-15b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (32, 6144, 48, 8, 24576, 256000)
+    assert c.ffn_type == "relu2"
+    c = get_config("gemma2-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == \
+        (42, 3584, 16, 8)
+    assert c.attention_pattern == ("local", "global")
+    assert c.logit_softcap == 30.0
+    c = get_config("qwen3-moe-30b-a3b")
+    assert c.moe.num_experts == 128 and c.moe.top_k == 8
+    c = get_config("mamba2-1.3b")
+    assert c.ssm.d_state == 128 and c.num_layers == 48
+    c = get_config("llama4-maverick-400b-a17b")
+    assert c.moe.top_k == 1 and c.vocab_size == 202048
+    c = get_config("recurrentgemma-9b")
+    assert c.attention_pattern == ("rec", "rec", "local")
+    assert c.num_kv_heads == 1
+    c = get_config("whisper-base")
+    assert c.encoder_layers == 6 and c.d_model == 512
+    c = get_config("qwen2-vl-72b")
+    assert c.num_layers == 80 and c.rope_style == "mrope"

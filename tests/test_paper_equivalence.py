@@ -1,0 +1,98 @@
+"""The paper's central correctness claim (§6): the optimized binary path
+
+is numerically equivalent to the non-optimized binary reference — for
+both the MLP (Table 2) and the CNN (Table 3) networks.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import cnn
+
+settings = hypothesis.settings(max_examples=8, deadline=None)
+
+
+def _randomize_bn(params, key):
+    bns = params.get("bns", []) + params.get("conv_bns", []) \
+        + params.get("dense_bns", [])
+    for i, bn in enumerate(bns):
+        c = bn["gamma"].shape[0]
+        k = jax.random.fold_in(key, i)
+        ks = jax.random.split(k, 5)
+        bn["gamma"] = jax.random.uniform(ks[0], (c,), minval=0.3,
+                                         maxval=1.5) * jnp.where(
+            jax.random.bernoulli(ks[4], 0.3, (c,)), -1.0, 1.0)
+        bn["beta"] = jax.random.normal(ks[1], (c,))
+        bn["mean"] = jax.random.normal(ks[2], (c,)) * 3
+        bn["var"] = jax.random.uniform(ks[3], (c,), minval=0.5, maxval=2.0)
+    return params
+
+
+@settings
+@hypothesis.given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+                  d_in=st.integers(8, 64), width=st.integers(16, 96))
+def test_bmlp_packed_equals_reference(seed, b, d_in, width):
+    key = jax.random.PRNGKey(seed)
+    spec = cnn.BMLPSpec(sizes=(d_in, width, width // 2, 10))
+    params = _randomize_bn(cnn.init_bmlp(key, spec), key)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (b, d_in), 0,
+                           256).astype(jnp.uint8)
+    want = cnn.bmlp_forward_float(params, x)
+    got = cnn.bmlp_forward_packed(cnn.pack_bmlp(params, spec), x,
+                                  backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_bcnn_packed_equals_reference(seed):
+    key = jax.random.PRNGKey(seed)
+    spec = cnn.BCNNSpec(
+        input_hw=(8, 8), c_in=3,
+        stages=(cnn.ConvStage(16), cnn.ConvStage(16, pool=True),
+                cnn.ConvStage(32, pool=True)),
+        dense=(48, 10))
+    params = _randomize_bn(cnn.init_bcnn(key, spec), key)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (2, 8, 8, 3), 0,
+                           256).astype(jnp.uint8)
+    want = cnn.bcnn_forward_float(params, x, spec)
+    got = cnn.bcnn_forward_packed(cnn.pack_bcnn(params, spec), x,
+                                  backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_bcnn_pallas_backend_matches_jnp():
+    """The pallas (interpret) and jnp backends agree bit-for-bit."""
+    key = jax.random.PRNGKey(7)
+    spec = cnn.BCNNSpec(input_hw=(8, 8), c_in=3,
+                        stages=(cnn.ConvStage(16, pool=True),),
+                        dense=(32, 10))
+    params = _randomize_bn(cnn.init_bcnn(key, spec), key)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (2, 8, 8, 3), 0,
+                           256).astype(jnp.uint8)
+    packed = cnn.pack_bcnn(params, spec)
+    a = cnn.bcnn_forward_packed(packed, x, backend="jnp")
+    b = cnn.bcnn_forward_packed(packed, x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_paper_architectures_instantiate():
+    """The full paper architectures (Table 2/3) build and pack."""
+    mlp_spec = cnn.BMLPSpec()            # 784-4096^3-10
+    assert mlp_spec.sizes == (784, 4096, 4096, 4096, 10)
+    cnn_spec = cnn.BCNNSpec()            # 2x128C3-MP2-...-1024FC-10
+    assert cnn_spec.stages[-1].c_out == 512
+    # memory: packed vs float parameter bytes (paper reports ~31x)
+    key = jax.random.PRNGKey(0)
+    spec = cnn.BMLPSpec(sizes=(784, 512, 10))
+    params = cnn.init_bmlp(key, spec)
+    packed = cnn.pack_bmlp(params, spec)
+    fp_bytes = sum(p["w"].size * 4 for p in params["layers"])
+    bin_bytes = sum(p["w_packed"].size * 4 for p in packed["layers"])
+    assert fp_bytes / bin_bytes > 28     # ~32x less (padding overhead)

@@ -1,0 +1,89 @@
+"""The paper's technique as an LM feature (DESIGN.md §3): packed-weight
+
+inference path, strategy equivalence, pack-once semantics, memory win."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantize import (GemmStrategy, QuantConfig, QuantMode)
+from repro.models import linear as LN
+from repro.models import model as M
+from repro.utils.tree import tree_bytes
+
+
+def test_packed_linear_matches_latent_binary():
+    """Packed inference == latent sign-binarized training forward."""
+    key = jax.random.PRNGKey(0)
+    lp = LN.init_linear(key, 96, 64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 96))
+    q = QuantConfig(mode=QuantMode.BINARY)
+    want = LN.apply_linear(lp, x, q, dtype=jnp.float32)
+    packed = LN.pack_linear(lp)
+    got_vpu = LN.apply_linear(
+        packed, x, dataclasses.replace(q, strategy=GemmStrategy.VPU_XNOR),
+        dtype=jnp.float32)
+    got_mxu = LN.apply_linear(
+        packed, x, dataclasses.replace(q,
+                                       strategy=GemmStrategy.MXU_UNPACK),
+        dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_vpu), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_mxu), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_binary_weight_mode_keeps_activations_real():
+    key = jax.random.PRNGKey(1)
+    lp = LN.init_linear(key, 64, 32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 64))
+    q = QuantConfig(mode=QuantMode.BINARY_WEIGHT)
+    w = lp["w"]
+    alpha = jnp.mean(jnp.abs(w.T), axis=1)
+    want = x @ jnp.where(w >= 0, 1.0, -1.0) * alpha
+    got = LN.apply_linear(LN.pack_linear(lp), x, q, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pack_tree_memory_reduction():
+    """Pack-once (paper C2): stacked LM weights shrink ~16x vs fp32
+    (uint32 words hold 32 weights; alpha adds d_out floats)."""
+    cfg = get_config("starcoder2-3b", reduced=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    stack_fp = tree_bytes(params["stack"])
+    packed = LN.maybe_pack_tree(params, QuantConfig(
+        mode=QuantMode.BINARY_WEIGHT))
+    stack_bin = tree_bytes(packed["stack"])
+    assert stack_fp / stack_bin > 10    # norms/alphas keep it under 32x
+
+
+def test_packed_lm_decode_runs():
+    """End-to-end packed binary-weight decode (the serve path)."""
+    cfg = get_config("starcoder2-3b", quant="binary_weight", reduced=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    params = LN.maybe_pack_tree(params, cfg.quant)
+    cache = M.init_cache(params, cfg, 2, 8)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = M.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+
+
+def test_fully_binary_lm_forward_runs():
+    cfg = get_config("starcoder2-3b", quant="binary", reduced=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    loss = M.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_auto_strategy_crossover():
+    q = QuantConfig(mode=QuantMode.BINARY)
+    assert q.resolve_strategy(1, 1024, 4096) == GemmStrategy.VPU_XNOR
+    assert q.resolve_strategy(128, 1024, 4096) == GemmStrategy.VPU_XNOR
+    assert q.resolve_strategy(8192, 1024, 4096) == GemmStrategy.MXU_UNPACK
