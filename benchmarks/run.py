@@ -10,13 +10,22 @@ from __future__ import annotations
 
 
 def main() -> None:
+    import json
+    import os
+
     from benchmarks import (grad_compress_bytes, table1_matmul, table2_mlp,
                             table3_cnn)
     print("name,us_per_call,derived")
     mods = [table1_matmul, table2_mlp, table3_cnn, grad_compress_bytes]
+    all_rows = []
     for mod in mods:
         for name, us, note in mod.rows():
             print(f"{name},{us:.1f},{note}")
+            all_rows.append({"name": name, "value": us, "note": note})
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/BENCH_run.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print("wrote experiments/BENCH_run.json")
 
 
 if __name__ == "__main__":

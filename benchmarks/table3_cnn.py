@@ -2,17 +2,36 @@
 
 Paper: CPU 85.2 ms / GPU 5.2 ms / GPUopt 1.0 ms; memory 53.54 MB ->
 1.73 MB (~31x).  CPU container: we measure the float-sign reference vs
-the packed path at a reduced spatial size (full 32x32 VGG on CPU jnp is
-seconds — reported too), and the exact 31x memory figure at full size."""
+the packed path *per backend* (jnp = host-side im2col, pallas =
+in-kernel im2col via interpret mode) at a reduced spatial size, the
+exact 31x memory figure at full size, and op-level evidence that the
+Pallas conv kernel no longer materializes the im2col patch matrix in
+HBM (the largest live intermediate drops to the conv output itself).
+
+    PYTHONPATH=src python -m benchmarks.table3_cnn          # CSV + JSON
+    REPRO_BENCH_SMOKE=1 ... python -m benchmarks.table3_cnn # CI-sized
+
+Writes ``experiments/BENCH_table3_cnn.json``.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+try:                                   # jax >= 0.6 moved these aliases
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+except ImportError:                    # jax <= 0.5
+    from jax.core import ClosedJaxpr, Jaxpr
+
+from repro.core import binary_layers as L
+from repro.kernels import ops as kops
 from repro.models import cnn
-from repro.utils.tree import tree_bytes
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def _time(fn, *args, reps=3):
@@ -24,51 +43,141 @@ def _time(fn, *args, reps=3):
     return (time.monotonic() - t0) / reps * 1e6
 
 
+def _max_intermediate_bytes(fn, *args) -> tuple[int, tuple]:
+    """Largest intermediate array any equation produces, recursing into
+
+    nested jaxprs (jit bodies) but NOT into pallas_call kernels — a
+    kernel's internals live in VMEM, so its HBM footprint is just its
+    declared outputs.  This is the op-count-level evidence that the
+    Pallas conv path never stages the (B·H'·W', KH·KW·Cw) patch matrix.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    best = [0, ()]
+
+    def visit_aval(aval):
+        if hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            nbytes = int(aval.size) * aval.dtype.itemsize
+            if nbytes > best[0]:
+                best[0], best[1] = nbytes, tuple(aval.shape)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                visit_aval(v.aval)
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for p in eqn.params.values():
+                for sub in _subjaxprs(p):
+                    walk(sub)
+
+    def _subjaxprs(p):
+        if isinstance(p, ClosedJaxpr):
+            yield p.jaxpr
+        elif isinstance(p, Jaxpr):
+            yield p
+        elif isinstance(p, (list, tuple)):
+            for e in p:
+                yield from _subjaxprs(e)
+
+    walk(closed.jaxpr)
+    return best[0], best[1]
+
+
 def rows() -> list[tuple]:
     key = jax.random.PRNGKey(0)
     out = []
 
-    # reduced spatial size for CPU wall-time comparison
-    spec_s = cnn.BCNNSpec(input_hw=(16, 16), c_in=3,
-                          stages=(cnn.ConvStage(128),
-                                  cnn.ConvStage(128, pool=True),
-                                  cnn.ConvStage(256, pool=True),
-                                  cnn.ConvStage(512, pool=True)),
-                          dense=(1024, 10))
+    # Reduced spatial size for CPU wall-time comparison (CI smoke shrinks
+    # further: interpret-mode Pallas is emulated op-by-op on CPU).
+    if SMOKE:
+        spec_s = cnn.BCNNSpec(input_hw=(8, 8), c_in=3,
+                              stages=(cnn.ConvStage(32),
+                                      cnn.ConvStage(64, pool=True)),
+                              dense=(64, 10))
+        reps, tag = 1, "bcnn8"
+    else:
+        spec_s = cnn.BCNNSpec(input_hw=(16, 16), c_in=3,
+                              stages=(cnn.ConvStage(128),
+                                      cnn.ConvStage(128, pool=True),
+                                      cnn.ConvStage(256, pool=True),
+                                      cnn.ConvStage(512, pool=True)),
+                              dense=(1024, 10))
+        reps, tag = 3, "bcnn16"
     params = cnn.init_bcnn(key, spec_s)
     packed = cnn.pack_bcnn(params, spec_s)
-    x = jax.random.randint(key, (1, 16, 16, 3), 0, 256).astype(jnp.uint8)
+    x = jax.random.randint(key, (1, *spec_s.input_hw, 3), 0,
+                           256).astype(jnp.uint8)
     f_float = jax.jit(lambda v: cnn.bcnn_forward_float(params, v, spec_s))
-    out.append(("table3/bcnn16_float_fwd_b1", _time(f_float, x),
+    t_float = _time(f_float, x, reps=reps)
+    out.append((f"table3/{tag}_float_fwd_b1", t_float,
                 "float-sign reference"))
-    f_packed = jax.jit(lambda v: cnn.bcnn_forward_packed(packed, v,
-                                                         backend="jnp"))
-    out.append(("table3/bcnn16_packed_fwd_b1", _time(f_packed, x),
-                "packed XNOR conv via channel-packed im2col (C3/C6)"))
+    for backend in ("jnp", "pallas"):
+        f_packed = jax.jit(lambda v, be=backend:
+                           cnn.bcnn_forward_packed(packed, v, backend=be))
+        t = _time(f_packed, x, reps=reps)
+        note = ("host-side im2col + packed GEMM (pre-subsystem path)"
+                if backend == "jnp" else
+                "fused Pallas conv + BN-sign-repack epilogue (interpret)")
+        out.append((f"table3/{tag}_packed_fwd_b1_{backend}", t,
+                    f"{t_float / t:.2f}x vs float | {note}"))
 
-    # full paper architecture: memory only (params), fwd at batch 1
-    spec = cnn.BCNNSpec()
-    params_f = cnn.init_bcnn(jax.random.PRNGKey(1), spec)
-    packed_f = cnn.pack_bcnn(params_f, spec)
-    conv_fp = sum(p["w"].size * 4 for p in params_f["convs"]) + \
-        sum(p["w"].size * 4 for p in params_f["denses"])
-    conv_bin = sum(p["w_packed"].size * 4 for p in packed_f["convs"]) + \
-        sum(p["w_packed"].size * 4 for p in packed_f["denses"])
-    out.append(("table3/bcnn_param_bytes_float", float(conv_fp),
-                f"{conv_fp / 2**20:.1f} MiB (paper: 53.54 MB)"))
-    out.append(("table3/bcnn_param_bytes_packed", float(conv_bin),
-                f"{conv_fp / conv_bin:.1f}x smaller (paper: ~31x)"))
-    x32 = jax.random.randint(key, (1, 32, 32, 3), 0, 256).astype(jnp.uint8)
-    f32 = jax.jit(lambda v: cnn.bcnn_forward_packed(packed_f, v,
-                                                     backend="jnp"))
-    out.append(("table3/bcnn32_packed_fwd_b1", _time(f32, x32, reps=1),
-                "full paper CNN, packed path"))
+    # Patch-matrix materialization evidence on one mid-stack conv layer:
+    # the jnp backend's largest intermediate IS the im2col patch matrix;
+    # the Pallas backend's largest is the conv output / packed image.
+    ci, co, hh = (32, 64, 8) if SMOKE else (128, 256, 16)
+    wconv = jax.random.normal(jax.random.fold_in(key, 3), (co, 3, 3, ci))
+    plan = L.pack_binary_conv2d({"w": wconv}, input_hw=(hh, hh))
+    xs = jax.random.normal(jax.random.fold_in(key, 4), (1, hh, hh, ci))
+    x_p = kops.bitpack(xs.reshape(-1, ci), backend="jnp"
+                       ).reshape(1, hh, hh, -1)
+    for backend in ("jnp", "pallas"):
+        nbytes, shape = _max_intermediate_bytes(
+            lambda v, be=backend: kops.binary_conv2d_packed(plan, v,
+                                                            backend=be),
+            x_p)
+        what = ("host im2col: patch matrix + XOR broadcast staged in HBM"
+                if backend == "jnp" else
+                "in-kernel im2col: largest live array is the conv output")
+        out.append((f"table3/conv{hh}_max_intermediate_{backend}",
+                    float(nbytes),
+                    f"largest HBM intermediate {shape} | {what}"))
+
+    # Full paper architecture: memory only (params), fwd at batch 1.
+    if not SMOKE:
+        spec = cnn.BCNNSpec()
+        params_f = cnn.init_bcnn(jax.random.PRNGKey(1), spec)
+        packed_f = cnn.pack_bcnn(params_f, spec)
+        conv_fp = sum(p["w"].size * 4 for p in params_f["convs"]) + \
+            sum(p["w"].size * 4 for p in params_f["denses"])
+        conv_bin = sum(p["w_packed"].size * 4 for p in packed_f["convs"]) + \
+            sum(p["w_packed"].size * 4 for p in packed_f["denses"])
+        out.append(("table3/bcnn_param_bytes_float", float(conv_fp),
+                    f"{conv_fp / 2**20:.1f} MiB (paper: 53.54 MB)"))
+        out.append(("table3/bcnn_param_bytes_packed", float(conv_bin),
+                    f"{conv_fp / conv_bin:.1f}x smaller (paper: ~31x)"))
+        x32 = jax.random.randint(key, (1, 32, 32, 3), 0,
+                                 256).astype(jnp.uint8)
+        f32 = jax.jit(lambda v: cnn.bcnn_forward_packed(packed_f, v,
+                                                        backend="jnp"))
+        out.append(("table3/bcnn32_packed_fwd_b1", _time(f32, x32, reps=1),
+                    "full paper CNN, packed path"))
     return out
 
 
+def write_bench_json(rs: list[tuple], path="experiments/BENCH_table3_cnn.json"
+                     ) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = [{"name": n, "value": v, "note": note} for n, v, note in rs]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def main() -> None:
-    for name, us, note in rows():
+    rs = rows()
+    for name, us, note in rs:
         print(f"{name},{us:.1f},{note}")
+    write_bench_json(rs)
+    print("wrote experiments/BENCH_table3_cnn.json")
 
 
 if __name__ == "__main__":

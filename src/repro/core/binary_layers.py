@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import binarize as B
+from repro.kernels import binary_conv as bconv
 from repro.kernels import ops as kops
 
 Params = dict[str, Any]
@@ -63,6 +64,36 @@ def apply_binary_dense_packed(packed: Params, x: jax.Array, *,
     x2 = x.reshape(-1, x.shape[-1])
     x_p = kops.bitpack(x2, backend=backend)
     out = kops.binary_matmul_packed(x_p, packed["w_packed"],
+                                    k_true=packed["k_true"], backend=backend)
+    return out.reshape(*lead, -1)
+
+
+def pack_binary_dense_grouped(params: Params, group: int) -> Params:
+    """Weight packing for *pre-packed* activations with per-group padding.
+
+    A packed conv activation flattens to (…, G·Cw) words where each group
+    of ``Cw = ceil(group/32)`` words covers ``group`` channels of one
+    pixel, with zero-bit tails when ``group`` is not a multiple of 32.
+    Packing W the same way ((out, G, group) -> pack -> (out, G·Cw)) keeps
+    the tails zero on both operands, so they XOR to no mismatches and the
+    K − 2·popcount identity stays exact.
+    """
+    w = params["w"]                                   # (out, G*group)
+    out_dim, k = w.shape
+    assert k % group == 0, (k, group)
+    w_packed = B.pack_bits(w.reshape(out_dim, k // group, group)
+                           ).reshape(out_dim, -1)
+    return {"w_packed": w_packed, "k_true": k, "group": group}
+
+
+def apply_binary_dense_prepacked(packed: Params, x_packed: jax.Array, *,
+                                 backend: str = "auto") -> jax.Array:
+    """XNOR-popcount GEMM on an activation that is *already* bit-packed
+
+    (the fused-epilogue output) — no unpack/repack round trip."""
+    lead = x_packed.shape[:-1]
+    x2 = x_packed.reshape(-1, x_packed.shape[-1])
+    out = kops.binary_matmul_packed(x2, packed["w_packed"],
                                     k_true=packed["k_true"], backend=backend)
     return out.reshape(*lead, -1)
 
@@ -144,91 +175,37 @@ def pack_binary_conv2d(params: Params, *, input_hw: tuple[int, int],
                        stride: int = 1, padding: str = "SAME") -> Params:
     """Pack weights along channels-per-tap (paper C3) and precompute the
 
-    zero-padding correction matrix (paper C5): since the packed kernel
-    treats padded pixels as -1, the true zero-pad result is
-    ``packed_result + conv(W, pad_indicator)`` — computed once per layer
-    for the layer's input spatial size.
+    zero-padding correction matrix (paper C5) — delegated to the kernel
+    subsystem's plan builder (``kernels.binary_conv.make_conv_plan``),
+    which every conv backend consumes.
     """
-    w = params["w"]                                   # (O, KH, KW, I)
-    c_out, kh, kw, c_in = w.shape
-    w_flat = B.sign_pm1(w).reshape(c_out, kh * kw * c_in)
-    # Per-tap channel packing: (O, KH*KW, I) -> pack I -> (O, KH*KW*Iw)
-    w_taps = B.sign_pm1(w).reshape(c_out, kh * kw, c_in)
-    w_packed = B.pack_bits(w_taps).reshape(c_out, -1)
-
-    h, wdt = input_hw
-    if padding == "SAME":
-        out_h = -(-h // stride)
-        out_w = -(-wdt // stride)
-        pad_h = max((out_h - 1) * stride + kh - h, 0)
-        pad_w = max((out_w - 1) * stride + kw - wdt, 0)
-        pads = ((pad_h // 2, pad_h - pad_h // 2),
-                (pad_w // 2, pad_w - pad_w // 2))
-    else:
-        out_h = (h - kh) // stride + 1
-        out_w = (wdt - kw) // stride + 1
-        pads = ((0, 0), (0, 0))
-
-    # Correction (C5): pad_mask is 1 on the padded ring, 0 inside.  The
-    # packed conv computes sum_w*(-1) at pad taps; truth is 0, so add
-    # +sum_{pad taps} w == valid-correlate(pad_mask, sum_c w).
-    pad_mask = jnp.pad(jnp.zeros((h, wdt), jnp.float32), pads,
-                       constant_values=1.0)
-    w_tap_sum = B.sign_pm1(w).sum(axis=3)             # (O, KH, KW)
-    corr = jax.lax.conv_general_dilated(
-        pad_mask[None, :, :, None],
-        jnp.transpose(w_tap_sum, (1, 2, 0))[:, :, None, :],  # HWIO, I=1
-        window_strides=(stride, stride), padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]       # (H', W', O)
-
-    return {
-        "w_packed": w_packed, "k_true": kh * kw * c_in,
-        "kh": kh, "kw": kw, "c_in": c_in, "c_out": c_out,
-        "stride": stride, "pads": pads,
-        "out_hw": (out_h, out_w),
-        "correction": corr.astype(jnp.int32),
-        "w_flat_shape": w_flat.shape,
-    }
-
-
-def _extract_patches_packed(x_packed: jax.Array, kh: int, kw: int,
-                            stride: int, pads) -> jax.Array:
-    """im2col over channel-packed words (free-lift layout, paper C3/C6).
-
-    ``x_packed``: (B, H, W, Cw) uint32.  Spatial zero-word padding encodes
-    all-(-1) pixels — exactly the paper's "treat pad as -1" convention.
-    Returns (B, H', W', KH*KW*Cw).
-    """
-    xp = jnp.pad(x_packed, ((0, 0), pads[0], pads[1], (0, 0)),
-                 constant_values=0)                    # 0-words == all -1
-    bsz, hp, wp, cw = xp.shape
-    out_h = (hp - kh) // stride + 1
-    out_w = (wp - kw) // stride + 1
-    cols = []
-    for di in range(kh):
-        for dj in range(kw):
-            sl = xp[:, di:di + out_h * stride:stride,
-                    dj:dj + out_w * stride:stride, :]
-            cols.append(sl)
-    return jnp.concatenate(cols, axis=-1)
+    return bconv.make_conv_plan(params["w"], input_hw=input_hw,
+                                stride=stride, padding=padding)
 
 
 def apply_binary_conv2d_packed(packed: Params, x_packed: jax.Array, *,
                                backend: str = "auto") -> jax.Array:
-    """Optimized conv: packed im2col -> XNOR GEMM -> +correction (int32).
+    """Optimized conv: in-kernel im2col -> XNOR popcount -> +correction.
 
     ``x_packed``: (B, H, W, Cw) channel-packed input (pack C with
-    ``kops.bitpack`` / previous layer's packed activation).  The "lift"
-    back to a tensor is a free reshape (paper C3).
+    ``kops.bitpack`` / previous layer's packed activation).  Returns
+    (B, H', W', C_out) int32.  The 'pallas' backend gathers the KH·KW
+    packed taps in VMEM — the patch matrix is never materialized in HBM
+    ('jnp'/'ref' keep the old host-side im2col as the oracle).
     """
-    patches = _extract_patches_packed(x_packed, packed["kh"], packed["kw"],
-                                      packed["stride"], packed["pads"])
-    bsz, oh, ow, kcw = patches.shape
-    flat = patches.reshape(bsz * oh * ow, kcw)
-    out = kops.binary_matmul_packed(flat, packed["w_packed"],
-                                    k_true=packed["k_true"], backend=backend)
-    out = out.reshape(bsz, oh, ow, packed["c_out"])
-    return out + packed["correction"][None]
+    return kops.binary_conv2d_packed(packed, x_packed, backend=backend)
+
+
+def apply_binary_conv2d_bn_packed(packed: Params, folded: Params,
+                                  x_packed: jax.Array, *,
+                                  backend: str = "auto") -> jax.Array:
+    """Fused conv + BN-sign threshold + re-bitpack: packed in, packed out.
+
+    The inter-layer activation never appears un-packed in HBM.  Returns
+    (B, H', W', ceil(C_out/32)) uint32.
+    """
+    return kops.binary_conv2d_bn_sign_packed(packed, folded, x_packed,
+                                             backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +247,17 @@ def apply_bn_sign_folded(folded: Params, x_int: jax.Array) -> jax.Array:
     return pm1
 
 
+def apply_bn_sign_folded_packed(folded: Params, x_int: jax.Array, *,
+                                backend: str = "auto") -> jax.Array:
+    """Fused sign(BN(x)) + bit-pack along the channel axis (one kernel).
+
+    Bit-identical to ``pack_bits(apply_bn_sign_folded(folded, x))`` but
+    the ±1 float activation is never materialized.  Returns
+    (..., ceil(C/32)) uint32."""
+    return kops.bn_sign_pack(x_int, folded["tau"], folded["flip"],
+                             backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # Pooling
 # ---------------------------------------------------------------------------
@@ -285,3 +273,32 @@ def maxpool2d(x: jax.Array, window: int = 2, stride: int | None = None
         x, init, jax.lax.max,
         window_dimensions=(1, window, window, 1),
         window_strides=(1, stride, stride, 1), padding="VALID")
+
+
+def pool_flip_mask(folded: Params) -> jax.Array:
+    """Packed per-channel mask of ``flip > 0`` for :func:`maxpool2d_packed`."""
+    return B.pack_bits(folded["flip"])
+
+
+def maxpool2d_packed(x_packed: jax.Array, flip_mask: jax.Array,
+                     window: int = 2, stride: int | None = None) -> jax.Array:
+    """Max-pool entirely in the packed bit domain.
+
+    The forward order conv -> maxpool(int) -> sign(BN(·)) commutes with
+    thresholding because BN-sign is monotone per channel:
+    ``(max_i x_i >= tau) == OR_i (x_i >= tau)``.  After the fused epilogue
+    each bit is ``(x >= tau) XNOR (flip > 0)``, so pooling the *bits* is
+    OR where flip > 0 and AND where flip < 0 — two bitwise reduce_windows
+    and a mask select, no unpacking.  Zero-bit channel tails stay zero
+    through the AND branch because the mask is zero there too.
+    """
+    stride = stride or window
+    dims = (1, window, window, 1)
+    strides = (1, stride, stride, 1)
+    any_set = jax.lax.reduce_window(x_packed, jnp.uint32(0),
+                                    jax.lax.bitwise_or, dims, strides,
+                                    "VALID")
+    all_set = jax.lax.reduce_window(x_packed, jnp.uint32(0xFFFFFFFF),
+                                    jax.lax.bitwise_and, dims, strides,
+                                    "VALID")
+    return (any_set & flip_mask) | (all_set & ~flip_mask)

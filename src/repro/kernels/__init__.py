@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The paper's compute hot-spots as Pallas TPU kernels (see
+# docs/kernels.md): binary_matmul (XNOR-popcount GEMM), bitpack
+# (sign + bit-pack), binary_conv (fused in-kernel-im2col binary conv),
+# fused_epilogue (BN-sign-fold + re-bitpack).  ops.py is the
+# backend-dispatch façade; ref.py holds the pure-jnp oracles.

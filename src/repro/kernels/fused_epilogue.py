@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused BN-sign-fold + re-bitpack epilogue.
+
+Between binary layers the inference path is  int32 GEMM/conv output ->
+sign(BN(x)) -> ±1 -> bit-pack for the next packed layer.  Done naively
+that round-trips every activation through HBM three times (int32 out,
+float ±1, packed words).  This kernel fuses the folded-BN threshold
+compare (``fold_bn_sign``: sign(BN(x)) == flip·sign(x − tau)) with the
+re-bitpack, so one pass turns the raw int32 accumulator output into the
+next layer's packed uint32 words.
+
+Used standalone after layers whose producer can't fuse the epilogue
+itself (the bit-plane first layer, whose int32 output accumulates over
+8 plane convs, and the dense stack); the binary-conv kernel inlines the
+same epilogue directly (``binary_conv.binary_conv2d_bn_sign_packed``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import binarize as B
+
+_LANE = 128
+
+
+def bn_sign_bits_to_words(y: jax.Array, tau: jax.Array,
+                          flip: jax.Array) -> jax.Array:
+    """The epilogue contract, shared by every kernel that inlines it.
+
+    bit = (y >= tau) XNOR (flip > 0): the bit encoding of
+    sign(BN(y)) = flip * sign(y − tau)  (core.binary_layers.fold_bn_sign),
+    packed LSB-first along the last axis.  ``y``: (m, c) with c a multiple
+    of 32; ``tau``/``flip``: broadcastable (1, c).
+    """
+    ge = y.astype(jnp.float32) >= tau
+    bits = (ge == (flip > 0)).astype(jnp.uint32)
+    m, c = bits.shape
+    bits = bits.reshape(m, c // B.WORD_BITS, B.WORD_BITS)
+    shifts = jnp.arange(B.WORD_BITS, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def pad_bn_params(tau: jax.Array, flip: jax.Array,
+                  multiple: int) -> tuple[jax.Array, jax.Array]:
+    """Pad per-channel tau/flip up to ``multiple`` so padded channels pack
+
+    as 0-bits (the pack_bits tail convention): tau=+inf makes the compare
+    False, flip=+1 makes the bit (False == True) == 0."""
+    c = tau.shape[-1]
+    tau_p = B.pad_to_multiple(tau.reshape(1, c).astype(jnp.float32),
+                              multiple, 1, value=jnp.float32(jnp.inf))
+    flip_p = B.pad_to_multiple(flip.reshape(1, c).astype(jnp.float32),
+                               multiple, 1, value=1.0)
+    return tau_p, flip_p
+
+
+def _bn_sign_pack_kernel(x_ref, tau_ref, flip_ref, o_ref):
+    o_ref[...] = bn_sign_bits_to_words(x_ref[...], tau_ref[...],
+                                       flip_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_cw",
+                                             "interpret"))
+def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
+                 block_m: int = 256, block_cw: int = _LANE,
+                 interpret: bool = False) -> jax.Array:
+    """Fused sign(BN(x)) + bit-pack: (M, C) int32 -> (M, ceil(C/32)) uint32.
+
+    ``tau``/``flip``: per-channel folded BN threshold and sign flip.
+    Bit-identical to ``pack_bits(apply_bn_sign_folded({tau, flip}, x))``.
+    Channels padded up to the block pack as 0-bits (tau=+inf, flip=+1),
+    matching the ``pack_bits`` zero-bit tail convention.
+    """
+    m, c = x.shape
+    cw = B.packed_width(c)
+
+    block_m = max(8, min(block_m, _ceil_mult(m, 8)))
+    block_cw = max(_LANE, min(block_cw, _ceil_mult(cw, _LANE)))
+    block_c = block_cw * B.WORD_BITS
+
+    x_p = B.pad_to_multiple(B.pad_to_multiple(x, block_c, 1), block_m, 0)
+    tau_p, flip_p = pad_bn_params(tau, flip, block_c)
+    mp, cp = x_p.shape
+    grid = (mp // block_m, cp // block_c)
+
+    out = pl.pallas_call(
+        _bn_sign_pack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_cw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, cp // B.WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(x_p, tau_p, flip_p)
+    return out[:m, :cw]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

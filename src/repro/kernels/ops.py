@@ -13,13 +13,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import binarize as B
+from repro.kernels import binary_conv as _bconv
 from repro.kernels import binary_matmul as _bmm
 from repro.kernels import bitpack as _bp
+from repro.kernels import fused_epilogue as _fe
 from repro.kernels import ref as _ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    if backend not in ("pallas", "jnp", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
 
 
 def binary_matmul(a: jax.Array, b: jax.Array, *,
@@ -62,3 +72,88 @@ def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
         out = _bp.bitpack(x2, interpret=not _on_tpu())
         return out.reshape(*orig_shape[:-1], out.shape[-1])
     return B.pack_bits(x)
+
+
+# ---------------------------------------------------------------------------
+# Binary 2-D convolution (kernels/binary_conv.py) + fused epilogue
+# ---------------------------------------------------------------------------
+
+def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
+                         backend: str = "auto") -> jax.Array:
+    """Packed binary conv on a ``make_conv_plan`` plan.  Returns int32
+
+    (B, OH, OW, C_out) — exact integer conv of the ±1 tensors with true
+    zero padding (pad-as-(−1) + correction, paper C5).
+
+    backend: 'pallas' (in-kernel im2col, no patch matrix in HBM) |
+    'jnp'/'ref' (im2col outside, the pre-subsystem path) | 'auto'.
+    """
+    backend = _resolve(backend)
+    if backend == "pallas":
+        return _bconv.binary_conv2d_packed(
+            x_packed, plan["w_packed"], plan["correction"],
+            kh=plan["kh"], kw=plan["kw"], stride=plan["stride"],
+            pads=plan["pads"], out_hw=plan["out_hw"], c_out=plan["c_out"],
+            k_true=plan["k_true"], interpret=not _on_tpu())
+    return _ref.binary_conv2d_packed_ref(
+        x_packed, plan["w_packed"], plan["correction"], kh=plan["kh"],
+        kw=plan["kw"], stride=plan["stride"], pads=plan["pads"],
+        c_out=plan["c_out"], k_true=plan["k_true"])
+
+
+def binary_conv2d_bn_sign_packed(plan: dict, folded: dict,
+                                 x_packed: jax.Array, *,
+                                 backend: str = "auto") -> jax.Array:
+    """Fused conv + BN-sign-fold + re-bitpack.  Returns packed uint32
+
+    (B, OH, OW, ceil(C_out/32)) — the next binary conv layer's input,
+    without the int32 activation ever leaving the kernel un-packed.
+    ``folded``: {"tau", "flip"} from ``core.binary_layers.fold_bn_sign``.
+    """
+    backend = _resolve(backend)
+    if backend == "pallas":
+        return _bconv.binary_conv2d_bn_sign_packed(
+            x_packed, plan["w_packed"], plan["correction"], folded["tau"],
+            folded["flip"], kh=plan["kh"], kw=plan["kw"],
+            stride=plan["stride"], pads=plan["pads"], out_hw=plan["out_hw"],
+            c_out=plan["c_out"], k_true=plan["k_true"],
+            interpret=not _on_tpu())
+    return _ref.binary_conv2d_bn_sign_packed_ref(
+        x_packed, plan["w_packed"], plan["correction"], folded["tau"],
+        folded["flip"], kh=plan["kh"], kw=plan["kw"], stride=plan["stride"],
+        pads=plan["pads"], c_out=plan["c_out"], k_true=plan["k_true"])
+
+
+def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
+                 backend: str = "auto") -> jax.Array:
+    """Fused sign(BN(x)) + bit-pack along the last axis.
+
+    ``x``: (..., C) int32 (or any real) raw layer output.  Returns
+    (..., ceil(C/32)) uint32 — bit-identical to
+    ``pack_bits(apply_bn_sign_folded({tau, flip}, x))``.
+    """
+    backend = _resolve(backend)
+    lead = x.shape[:-1]
+    if backend == "pallas":
+        x2 = x.reshape(-1, x.shape[-1])
+        out = _fe.bn_sign_pack(x2, tau, flip, interpret=not _on_tpu())
+        return out.reshape(*lead, out.shape[-1])
+    return _ref.bn_sign_pack_ref(x, tau, flip)
+
+
+def binary_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                  padding: str = "SAME", backend: str = "auto") -> jax.Array:
+    """End-to-end binary conv on real-valued operands (mirrors
+
+    ``binary_matmul``): sign-binarizes + channel-packs ``x``, packs ``w``
+    per tap, and runs the XNOR-popcount conv.
+
+    ``x``: (B, H, W, C_in) real, ``w``: (C_out, KH, KW, C_in) real.
+    Returns (B, OH, OW, C_out) int32 == the integer dots of
+    ``conv(sign(x), sign(w))`` with true zero padding.
+    """
+    plan = _bconv.make_conv_plan(w, input_hw=x.shape[1:3], stride=stride,
+                                 padding=padding)
+    x2 = x.reshape(-1, x.shape[-1])
+    x_p = bitpack(x2, backend=backend).reshape(*x.shape[:-1], -1)
+    return binary_conv2d_packed(plan, x_p, backend=backend)

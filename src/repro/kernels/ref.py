@@ -38,3 +38,66 @@ def bitplane_dot_ref(x_uint8: jax.Array, w: jax.Array) -> jax.Array:
     """Reference first-layer bit-plane dot == exact integer GEMM."""
     return jnp.dot(x_uint8.astype(jnp.int32),
                    B.sign_pm1(w.astype(jnp.float32)).astype(jnp.int32).T)
+
+
+# ---------------------------------------------------------------------------
+# Binary conv2d (paper C5/C6) — the jnp backend AND the kernel oracle.
+# This path im2cols *outside* the kernel, materializing the full
+# (B·H'·W', KH·KW·Cw) patch matrix — exactly what the Pallas conv kernel
+# (kernels/binary_conv.py) exists to avoid.
+# ---------------------------------------------------------------------------
+
+def extract_patches_packed(x_packed: jax.Array, kh: int, kw: int,
+                           stride: int, pads) -> jax.Array:
+    """im2col over channel-packed words (free-lift layout, paper C3/C6).
+
+    ``x_packed``: (B, H, W, Cw) uint32.  Spatial zero-word padding encodes
+    all-(−1) pixels — the paper's "treat pad as −1" convention.
+    Returns (B, H', W', KH*KW*Cw).
+    """
+    xp = jnp.pad(x_packed, ((0, 0), pads[0], pads[1], (0, 0)),
+                 constant_values=0)                    # 0-words == all -1
+    bsz, hp, wp, cw = xp.shape
+    out_h = (hp - kh) // stride + 1
+    out_w = (wp - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = xp[:, di:di + out_h * stride:stride,
+                    dj:dj + out_w * stride:stride, :]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def binary_conv2d_packed_ref(x_packed: jax.Array, w_packed: jax.Array,
+                             correction: jax.Array, *, kh: int, kw: int,
+                             stride: int, pads, c_out: int,
+                             k_true: int) -> jax.Array:
+    """Reference packed conv: im2col -> XNOR GEMM -> +correction (int32)."""
+    patches = extract_patches_packed(x_packed, kh, kw, stride, pads)
+    bsz, oh, ow, kcw = patches.shape
+    flat = patches.reshape(bsz * oh * ow, kcw)
+    out = B.packed_matmul(flat, w_packed, k_true)
+    out = out.reshape(bsz, oh, ow, c_out)
+    return out + correction[None]
+
+
+def bn_sign_pack_ref(x: jax.Array, tau: jax.Array,
+                     flip: jax.Array) -> jax.Array:
+    """Reference fused BN-sign + pack: threshold to ±1, then bit-pack."""
+    ge = x.astype(jnp.float32) >= tau
+    pm1 = jnp.where(ge, 1.0, -1.0) * flip
+    return B.pack_bits(pm1)
+
+
+def binary_conv2d_bn_sign_packed_ref(x_packed: jax.Array,
+                                     w_packed: jax.Array,
+                                     correction: jax.Array, tau: jax.Array,
+                                     flip: jax.Array, *, kh: int, kw: int,
+                                     stride: int, pads, c_out: int,
+                                     k_true: int) -> jax.Array:
+    """Reference fused conv epilogue: conv, then BN-sign + re-bitpack."""
+    y = binary_conv2d_packed_ref(x_packed, w_packed, correction, kh=kh,
+                                 kw=kw, stride=stride, pads=pads,
+                                 c_out=c_out, k_true=k_true)
+    return bn_sign_pack_ref(y, tau, flip)

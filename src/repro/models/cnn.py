@@ -87,10 +87,12 @@ def bmlp_forward_packed(packed: dict, x_uint8: jax.Array, *,
     z = L.apply_bitplane_dense_packed(packed["layers"][0], x_uint8,
                                       backend=backend)
     for i in range(n - 1):
-        h = L.apply_bn_sign_folded(packed["folded"][i], z)      # ±1
+        # Fused threshold + re-bitpack: the ±1 activation never appears.
+        hp = L.apply_bn_sign_folded_packed(packed["folded"][i], z,
+                                           backend=backend)
         if i + 1 < n:
-            z = L.apply_binary_dense_packed(packed["layers"][i + 1], h,
-                                            backend=backend)
+            z = L.apply_binary_dense_prepacked(packed["layers"][i + 1], hp,
+                                               backend=backend)
     return L.apply_batchnorm(packed["bn_out"], z)
 
 
@@ -195,9 +197,18 @@ def pack_bcnn(params: dict, spec: BCNNSpec) -> dict:
             pc["correction"] = jnp.zeros_like(pc["correction"])
         packed_convs.append(pc)
     folded_conv = [L.fold_bn_sign(bn) for bn in params["conv_bns"]]
-    packed_dense = [L.pack_binary_dense(p) for p in params["denses"]]
+    # Bit-domain pooling masks (flip > 0 per channel) for pooled stages.
+    pool_masks = [L.pool_flip_mask(folded_conv[i]) if st.pool else None
+                  for i, st in enumerate(spec.stages)]
+    # The first dense layer consumes the flattened *packed* conv activation
+    # (fh, fw, Cw) — pack its weights per pixel group so the zero-bit
+    # channel tails line up (see pack_binary_dense_grouped).
+    c_last = spec.stages[-1].c_out
+    packed_dense = [L.pack_binary_dense_grouped(params["denses"][0], c_last)]
+    packed_dense += [L.pack_binary_dense(p) for p in params["denses"][1:]]
     folded_dense = [L.fold_bn_sign(bn) for bn in params["dense_bns"][:-1]]
     return {"convs": packed_convs, "folded_conv": folded_conv,
+            "pool_masks": pool_masks,
             "denses": packed_dense, "folded_dense": folded_dense,
             "bn_out": params["dense_bns"][-1], "spec": spec}
 
@@ -219,26 +230,37 @@ def _bitplane_conv_packed(pc: dict, x_uint8: jax.Array, nbits: int, *,
 
 def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
                         backend: str = "auto") -> jax.Array:
+    """Optimized forward: after the bit-plane first stage, every
+
+    inter-layer activation stays bit-packed in HBM end-to-end — fused
+    conv + BN-sign + re-bitpack kernels between conv stages, bit-domain
+    max-pooling (OR/AND under the flip mask), and pre-packed GEMMs
+    through the dense stack.  Thresholding before pooling is exact
+    because the folded BN-sign compare is monotone per channel.
+    """
     spec: BCNNSpec = packed["spec"]
+    n_conv = len(packed["convs"])
+    # Stage 0 accumulates 8 bit-plane convs in int32, so its epilogue runs
+    # standalone: pool on int32, then fused threshold + re-bitpack.
     z = _bitplane_conv_packed(packed["convs"][0], x_uint8,
                               spec.nbits_input, backend=backend)
-    n_conv = len(packed["convs"])
-    for i in range(n_conv):
-        st = spec.stages[i]
-        if st.pool:
-            z = L.maxpool2d(z)
-        h_pm1 = L.apply_bn_sign_folded(packed["folded_conv"][i], z)
-        if i + 1 < n_conv:
-            hp = kops.bitpack(h_pm1.reshape(-1, h_pm1.shape[-1]),
-                              backend=backend)
-            hp = hp.reshape(*h_pm1.shape[:-1], -1)
-            z = L.apply_binary_conv2d_packed(packed["convs"][i + 1], hp,
-                                             backend=backend)
-    h = h_pm1.reshape(h_pm1.shape[0], -1)
+    if spec.stages[0].pool:
+        z = L.maxpool2d(z)
+    hp = L.apply_bn_sign_folded_packed(packed["folded_conv"][0], z,
+                                       backend=backend)
+    # Stages 1..n-1: packed in, packed out — zero un-packed activations.
+    for i in range(1, n_conv):
+        hp = L.apply_binary_conv2d_bn_packed(
+            packed["convs"][i], packed["folded_conv"][i], hp,
+            backend=backend)
+        if spec.stages[i].pool:
+            hp = L.maxpool2d_packed(hp, packed["pool_masks"][i])
+    h = hp.reshape(hp.shape[0], -1)         # packed (B, fh*fw*Cw) words
     n = len(packed["denses"])
     for i in range(n):
-        z = L.apply_binary_dense_packed(packed["denses"][i], h,
-                                        backend=backend)
+        z = L.apply_binary_dense_prepacked(packed["denses"][i], h,
+                                           backend=backend)
         if i < n - 1:
-            h = L.apply_bn_sign_folded(packed["folded_dense"][i], z)
+            h = L.apply_bn_sign_folded_packed(packed["folded_dense"][i], z,
+                                              backend=backend)
     return L.apply_batchnorm(packed["bn_out"], z)

@@ -1,0 +1,46 @@
+"""Import shim so the suite runs with or without ``hypothesis``.
+
+``pytest.importorskip`` at module level would skip *every* test in a
+module, including the plain parametrized ones that don't need
+hypothesis.  Instead: re-export the real library when available, and
+otherwise substitute stubs where ``@hypothesis.given(...)`` turns the
+property test into a single skipped test and strategy constructors are
+inert.  Usage in test modules::
+
+    from _hypothesis_compat import hypothesis, st
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+    import types
+
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            def stub():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def _strategy(*_args, **_kwargs):
+        return None
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+    st = types.SimpleNamespace(
+        integers=_strategy, floats=_strategy, booleans=_strategy,
+        sampled_from=_strategy, lists=_strategy, tuples=_strategy,
+        just=_strategy, one_of=_strategy)
+
+__all__ = ["hypothesis", "st"]

@@ -1,8 +1,7 @@
 """Attention unit tests: chunked online-softmax vs naive reference,
 
 masks (causal / sliding window), GQA grouping, softcap, RoPE variants."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """Unit + property tests for the core binarization primitives (paper §4)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

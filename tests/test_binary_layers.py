@@ -1,6 +1,5 @@
 """Binary layer tests: pad-correction identity (C5), BN-fold, packed conv."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -2,8 +2,7 @@
 
 Every kernel: shapes x dtypes, bit-exact against ref.py.
 """
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,3 +89,108 @@ def test_ops_auto_backend_cpu_is_jnp():
     np.testing.assert_array_equal(
         np.asarray(ops.binary_matmul(a, b, backend="auto")),
         np.asarray(ref.binary_matmul_ref(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# Binary conv2d kernel (kernels/binary_conv.py) + fused epilogue
+# ---------------------------------------------------------------------------
+
+# Awkward geometries the packed path must get bit-exact: C_in not a
+# multiple of 32 (sub-word and multi-word), stride 2, VALID, 1x1 kernels,
+# even kernels, batch 1.
+CONV_CASES = [
+    (1, 7, 7, 3, 8, 3, 1, "SAME"),       # batch 1, tiny C_in
+    (2, 8, 8, 20, 33, 3, 2, "SAME"),     # stride 2, ragged C_out
+    (2, 9, 9, 40, 16, 3, 2, "VALID"),    # C_in > 32, not a multiple
+    (1, 5, 5, 32, 10, 1, 1, "SAME"),     # 1x1 kernel
+    (2, 6, 6, 64, 24, 2, 2, "VALID"),    # even kernel, stride 2
+]
+
+
+def _conv_float_int(x, w, stride, padding):
+    """Integer dots of conv(sign(x), sign(w)) with true zero padding."""
+    xb = B.sign_pm1(x)
+    wb = B.sign_pm1(w)
+    out = jax.lax.conv_general_dilated(
+        xb, jnp.transpose(wb, (1, 2, 3, 0)), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return np.asarray(out).astype(np.int32)
+
+
+@pytest.mark.parametrize("b,h,w,c_in,c_out,k,stride,padding", CONV_CASES)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_binary_conv2d_matches_float(b, h, w, c_in, c_out, k, stride,
+                                     padding, backend):
+    key = jax.random.PRNGKey(b * 131 + h * 17 + c_in)
+    x = jax.random.normal(key, (b, h, w, c_in))
+    wt = jax.random.normal(jax.random.fold_in(key, 1), (c_out, k, k, c_in))
+    want = _conv_float_int(x, wt, stride, padding)
+    got = ops.binary_conv2d(x, wt, stride=stride, padding=padding,
+                            backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def _rand_folded(key, c):
+    tau = jax.random.normal(key, (c,)) * 3
+    flip = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1),
+                                          0.4, (c,)), -1.0, 1.0)
+    return {"tau": tau, "flip": flip}
+
+
+@pytest.mark.parametrize("b,h,w,c_in,c_out,k,stride,padding", CONV_CASES)
+def test_binary_conv2d_fused_epilogue_matches_ref(b, h, w, c_in, c_out, k,
+                                                  stride, padding):
+    """Fused conv+BN-sign+repack == conv, then reference threshold+pack."""
+    from repro.kernels import binary_conv as BC
+    key = jax.random.PRNGKey(b * 7 + c_out)
+    x = jax.random.normal(key, (b, h, w, c_in))
+    wt = jax.random.normal(jax.random.fold_in(key, 1), (c_out, k, k, c_in))
+    plan = BC.make_conv_plan(wt, input_hw=(h, w), stride=stride,
+                             padding=padding)
+    x_p = ops.bitpack(x.reshape(-1, c_in), backend="jnp"
+                      ).reshape(b, h, w, -1)
+    folded = _rand_folded(jax.random.fold_in(key, 2), c_out)
+    conv = ops.binary_conv2d_packed(plan, x_p, backend="jnp")
+    want = ref.bn_sign_pack_ref(conv, folded["tau"], folded["flip"])
+    for backend in ("jnp", "pallas"):
+        got = ops.binary_conv2d_bn_sign_packed(plan, folded, x_p,
+                                               backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,c", [(1, 16), (13, 33), (40, 128), (5, 100)])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bn_sign_pack_shapes(m, c, backend):
+    key = jax.random.PRNGKey(m * 3 + c)
+    x = jax.random.randint(key, (m, c), -200, 200)
+    folded = _rand_folded(jax.random.fold_in(key, 1), c)
+    got = ops.bn_sign_pack(x, folded["tau"], folded["flip"],
+                           backend=backend)
+    want = ref.bn_sign_pack_ref(x, folded["tau"], folded["flip"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bn_sign_pack_threshold_boundary():
+    """x == tau must take the >= branch, matching apply_bn_sign_folded."""
+    x = jnp.array([[5, -5, 0]], dtype=jnp.int32)
+    tau = jnp.array([5.0, -5.0, 0.0])
+    flip = jnp.array([1.0, -1.0, 1.0])
+    for backend in ("jnp", "pallas"):
+        got = ops.bn_sign_pack(x, tau, flip, backend=backend)
+        # ge = [T, T, T]; flip>0 = [T, F, T] -> bits [1, 0, 1] -> 0b101
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.array([[0b101]], dtype=np.uint32))
+
+
+def test_maxpool_packed_equals_pool_then_threshold():
+    """Bit-domain pooling == maxpool(int32) then threshold, both flips."""
+    from repro.core import binary_layers as L
+    key = jax.random.PRNGKey(3)
+    z = jax.random.randint(key, (2, 6, 6, 40), -100, 100)
+    folded = _rand_folded(jax.random.fold_in(key, 1), 40)
+    want = ref.bn_sign_pack_ref(L.maxpool2d(z), folded["tau"],
+                                folded["flip"])
+    pooled = L.maxpool2d_packed(
+        ops.bn_sign_pack(z, folded["tau"], folded["flip"], backend="jnp"),
+        L.pool_flip_mask(folded))
+    np.testing.assert_array_equal(np.asarray(pooled), np.asarray(want))

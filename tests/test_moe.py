@@ -1,8 +1,7 @@
 """MoE dispatch tests: oracle equivalence, capacity semantics, weights."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

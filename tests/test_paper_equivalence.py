@@ -3,8 +3,7 @@
 is numerically equivalent to the non-optimized binary reference — for
 both the MLP (Table 2) and the CNN (Table 3) networks.
 """
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -80,6 +79,59 @@ def test_bcnn_pallas_backend_matches_jnp():
     b = cnn.bcnn_forward_packed(packed, x, backend="pallas")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
                                atol=1e-6)
+
+
+@pytest.mark.parametrize("h,c_in,c_out,k,stride,padding", [
+    (8, 20, 8, 3, 1, "SAME"),     # C_in not a multiple of 32
+    (9, 3, 12, 3, 2, "SAME"),     # stride 2, odd spatial
+    (8, 40, 8, 3, 1, "VALID"),    # VALID, multi-word ragged C_in
+    (6, 33, 8, 1, 1, "SAME"),     # 1x1 kernel
+    (7, 16, 8, 3, 2, "VALID"),    # stride 2 + VALID
+])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_conv_packed_equals_float_awkward_shapes(h, c_in, c_out, k, stride,
+                                                 padding, backend):
+    """Layer-level claim on awkward shapes (batch 1 included): the packed
+
+    conv path matches apply_binary_conv2d_float exactly on integer dots."""
+    from repro.core import binarize as B
+    from repro.core import binary_layers as L
+    from repro.kernels import ops as kops
+    key = jax.random.PRNGKey(h * 31 + c_in * 7 + c_out)
+    x = jax.random.normal(key, (1, h, h, c_in))
+    params = L.init_binary_conv2d(jax.random.fold_in(key, 1), k, k, c_in,
+                                  c_out)
+    want = L.apply_binary_conv2d_float(params, x, stride=stride,
+                                       padding=padding)
+    packed = L.pack_binary_conv2d(params, input_hw=(h, h), stride=stride,
+                                  padding=padding)
+    x_p = kops.bitpack(B.sign_pm1(x).reshape(-1, c_in), backend="jnp"
+                       ).reshape(1, h, h, -1)
+    got = L.apply_binary_conv2d_packed(packed, x_p, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(want).astype(np.int32))
+
+
+def test_bcnn_fused_path_ragged_channels():
+    """Full fused pipeline with channel counts that are NOT multiples of
+
+    32: the fused epilogue's zero-bit tails, the bit-domain pooling, and
+    the grouped conv->dense boundary packing must all stay exact."""
+    key = jax.random.PRNGKey(11)
+    spec = cnn.BCNNSpec(
+        input_hw=(8, 8), c_in=3,
+        stages=(cnn.ConvStage(20), cnn.ConvStage(24, pool=True),
+                cnn.ConvStage(40, pool=True)),
+        dense=(33, 10))
+    params = _randomize_bn(cnn.init_bcnn(key, spec), key)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (3, 8, 8, 3), 0,
+                           256).astype(jnp.uint8)
+    want = cnn.bcnn_forward_float(params, x, spec)
+    packed = cnn.pack_bcnn(params, spec)
+    for backend in ("jnp", "pallas"):
+        got = cnn.bcnn_forward_packed(packed, x, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
 
 
 def test_paper_architectures_instantiate():

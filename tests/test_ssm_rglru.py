@@ -1,8 +1,7 @@
 """Recurrence oracles: SSD chunked scan vs the sequential state recurrence,
 
 RG-LRU associative scan vs a per-step loop, chunk-size invariance."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
