@@ -22,14 +22,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-try:                                   # jax >= 0.6 moved these aliases
-    from jax.extend.core import ClosedJaxpr, Jaxpr
-except ImportError:                    # jax <= 0.5
-    from jax.core import ClosedJaxpr, Jaxpr
-
 from repro.core import binary_layers as L
 from repro.kernels import ops as kops
 from repro.models import cnn
+from repro.utils.jaxpr import count_pallas_calls, subjaxprs
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
@@ -67,17 +63,8 @@ def _max_intermediate_bytes(fn, *args) -> tuple[int, tuple]:
             if eqn.primitive.name == "pallas_call":
                 continue
             for p in eqn.params.values():
-                for sub in _subjaxprs(p):
+                for sub in subjaxprs(p):
                     walk(sub)
-
-    def _subjaxprs(p):
-        if isinstance(p, ClosedJaxpr):
-            yield p.jaxpr
-        elif isinstance(p, Jaxpr):
-            yield p
-        elif isinstance(p, (list, tuple)):
-            for e in p:
-                yield from _subjaxprs(e)
 
     walk(closed.jaxpr)
     return best[0], best[1]
@@ -141,6 +128,24 @@ def rows() -> list[tuple]:
         out.append((f"table3/conv{hh}_max_intermediate_{backend}",
                     float(nbytes),
                     f"largest HBM intermediate {shape} | {what}"))
+
+    # First-layer bit-plane conv: ONE fused kernel launch (in-kernel
+    # plane loop over the VMEM-resident plane stack) vs the 8 sequential
+    # per-plane convs of the jnp/pre-fusion path.
+    pc0 = packed["convs"][0]
+    nb = spec_s.nbits_input
+    launches = count_pallas_calls(
+        lambda v: cnn._bitplane_conv_packed(pc0, v, nb, backend="pallas"),
+        x)
+    out.append((f"table3/{tag}_bitplane_l1_kernel_launches", float(launches),
+                f"{nb} planes fused into 1 pallas_call "
+                "(was 8 sequential plane convs)"))
+    for backend, note in (("jnp", "8-plane sequential reference"),
+                          ("pallas", "single fused launch (interpret)")):
+        f_l1 = jax.jit(lambda v, be=backend:
+                       cnn._bitplane_conv_packed(pc0, v, nb, backend=be))
+        t = _time(f_l1, x, reps=reps)
+        out.append((f"table3/{tag}_bitplane_l1_fwd_{backend}", t, note))
 
     # Full paper architecture: memory only (params), fwd at batch 1.
     if not SMOKE:

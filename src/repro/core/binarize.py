@@ -172,6 +172,25 @@ def bitplanes_uint8(x: jax.Array, nbits: int = 8) -> jax.Array:
     return planes
 
 
+def pack_bitplanes_uint8(x: jax.Array, nbits: int = 8) -> jax.Array:
+    """Split fixed-precision input into bit-planes AND channel-pack them.
+
+    ``x``: (..., C) uint8 (or int in [0, 2^nbits)).  Returns
+    (nbits, ..., ceil(C/32)) uint32.  Plane value 1 encodes logical +1
+    (bit 1) and plane value 0 encodes −1 (bit 0), so the packed word IS
+    the raw plane bits — no ±1 round trip.  Bit-identical to
+    ``pack_bits(2*bitplanes_uint8(x)[i] - 1)`` per plane, pure jnp bit
+    ops (no kernel launch — the single-launch bit-plane conv kernel
+    consumes this directly).
+    """
+    planes = bitplanes_uint8(x, nbits)                  # (nbits, ..., C)
+    cw = packed_width(x.shape[-1])
+    bits = pad_to_multiple(planes.astype(WORD_DTYPE), WORD_BITS, axis=-1)
+    bits = bits.reshape(*planes.shape[:-1], cw, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return (bits << shifts).sum(axis=-1, dtype=WORD_DTYPE)
+
+
 def bitplane_dot(x_uint8: jax.Array, w_pm1: jax.Array, nbits: int = 8
                  ) -> jax.Array:
     """Exact first-layer dot via bit-planes (paper §4.3, exact form).

@@ -209,6 +209,37 @@ def apply_binary_conv2d_bn_packed(packed: Params, folded: Params,
 
 
 # ---------------------------------------------------------------------------
+# First-layer bit-plane conv (paper §4.3 / C4)
+# ---------------------------------------------------------------------------
+
+def pack_bitplane_conv2d(params: Params, *, input_hw: tuple[int, int],
+                         stride: int = 1, padding: str = "SAME",
+                         nbits: int = 8) -> Params:
+    """Conv plan for the fixed-precision first layer: per-tap weight
+
+    packing plus the all-taps rowsum that absorbs both the {0,1}->±1
+    plane shift and the zero-pad correction (the C5 correction is
+    identically zero, so the plan carries none — see
+    ``kernels.binary_conv.make_bitplane_conv_plan``).
+    """
+    return bconv.make_bitplane_conv_plan(params["w"], input_hw=input_hw,
+                                         stride=stride, padding=padding,
+                                         nbits=nbits)
+
+
+def apply_bitplane_conv2d_packed(packed: Params, x_uint8: jax.Array, *,
+                                 backend: str = "auto") -> jax.Array:
+    """First conv layer on raw fixed-precision input, fully binary.
+
+    On the pallas backend this is ONE kernel launch — the plane loop runs
+    in-kernel over a VMEM-resident plane stack (previously 8 sequential
+    per-plane conv launches).  Returns (B, H', W', C_out) int32 ==
+    integer conv of the raw input against sign(W), true zero padding.
+    """
+    return kops.bitplane_conv2d_packed(packed, x_uint8, backend=backend)
+
+
+# ---------------------------------------------------------------------------
 # Batch-norm (inference) + sign, and the folded threshold form
 # ---------------------------------------------------------------------------
 

@@ -6,20 +6,36 @@ im2col in plain jnp **outside** any kernel — materializing the full
 (B·H'·W', KH·KW·Cw) patch matrix in HBM — then ran the packed GEMM over
 it.  This kernel performs im2col **inside** the kernel:
 
-* the channel-packed input image tile lives in VMEM ((Hp, Wp, Cw) uint32,
+* the channel-packed input image lives in VMEM ((Hp, Wp, Cw) uint32,
   channels packed 32/word, paper C3 "free lift" layout),
-* for each of the KH·KW taps the kernel takes a strided in-VMEM slice of
-  the image (the im2col gather — never written back to HBM),
+* each program slices its M tile's input slab from the VMEM-resident
+  image with ``pl.ds`` (rows ``m·block_oh·stride`` onward), then for each
+  of the KH·KW taps takes a strided in-VMEM slice of the slab (the
+  im2col gather — never written back to HBM),
 * XNOR-popcount accumulates word-by-word into an int32 accumulator
-  (one full (OH·OW, bn) VPU op per packed word, same scheme as
+  (one full (block_m, bn) VPU op per packed word, same scheme as
   ``binary_matmul``),
 * the epilogue folds the paper's pad-as-(−1) correction matrix (C5), and
   optionally the BN-sign threshold + re-bitpack (``fused_epilogue``), so
   the activation leaves the kernel already packed for the next layer.
 
-Grid: (batch, C_out blocks).  Each program computes all output pixels of
-one image for one block of output channels — the contraction is complete
-per program, so no cross-step scratch accumulator is needed.
+Grid: ``(batch, M tiles of OH·OW, C_out blocks)``.  The M dimension is
+tiled by output *rows* — an M tile is ``block_oh`` rows = ``block_oh·OW``
+flattened output pixels — so each tile's input slab is a contiguous row
+band of the image and the contraction is complete per program (no
+cross-step scratch accumulator).  The image BlockSpec depends only on
+the batch index, so Pallas holds one image DMA resident in VMEM across
+all (m, j) steps of a batch element while the pipeline emitter
+double-buffers the streaming blocks (weights, correction, output tiles)
+— and prefetches the *next* batch element's image DMA under the current
+batch's compute.
+
+The first-layer fixed-precision conv (paper C4) is a third kernel,
+:func:`bitplane_conv2d_packed`: the 8 bit-plane images ride along in one
+VMEM block and an in-kernel plane loop reuses the resident image across
+planes, folding the ``2^i`` plane weighting and the rowsum form of the
+pad correction into the epilogue — one kernel launch where the model
+previously issued 8 sequential plane convs.
 
 Supported: arbitrary integer stride (paper evaluates 1 and 2), SAME and
 VALID padding; spatial padding is staged as all-zero words (bit 0 == −1,
@@ -34,10 +50,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import binarize as B
-from repro.kernels.fused_epilogue import bn_sign_bits_to_words, pad_bn_params
+from repro.kernels.fused_epilogue import (bn_sign_bits_to_words,
+                                          check_block_lanes, pad_bn_params)
 
 # Minimum tile granularity on TPU: (8 sublanes, 128 lanes).
 _LANE = 128
+
+# Default M-tile budget: ~this many output pixels per tile.  Small images
+# fit in one tile (the pre-tiling behaviour); serving-sized spatial dims
+# stream in row bands so the output/correction tiles stay VMEM-friendly.
+_DEFAULT_TILE_M = 1024
 
 
 # ---------------------------------------------------------------------------
@@ -117,45 +139,101 @@ def make_conv_plan(w: jax.Array, *, input_hw: tuple[int, int],
     }
 
 
-# ---------------------------------------------------------------------------
-# The kernel
-# ---------------------------------------------------------------------------
+def make_bitplane_conv_plan(w: jax.Array, *, input_hw: tuple[int, int],
+                            stride: int = 1, padding: str = "SAME",
+                            nbits: int = 8) -> dict:
+    """Conv plan for the first-layer bit-plane conv (paper C4).
 
-def _conv_kernel(x_ref, w_ref, corr_ref, o_ref, *, kh, kw, stride, oh, ow,
-                 cw, k_true):
-    """In-kernel im2col + XNOR-popcount, int32 output tile."""
-    y = _conv_accumulate(x_ref, w_ref, corr_ref, kh=kh, kw=kw, stride=stride,
-                         oh=oh, ow=ow, cw=cw, k_true=k_true)
-    o_ref[0] = y
-
-
-def _conv_bn_sign_kernel(x_ref, w_ref, corr_ref, tau_ref, flip_ref, o_ref, *,
-                         kh, kw, stride, oh, ow, cw, k_true):
-    """Fused variant: conv -> BN-sign threshold -> re-bitpack (uint32)."""
-    y = _conv_accumulate(x_ref, w_ref, corr_ref, kh=kh, kw=kw, stride=stride,
-                         oh=oh, ow=ow, cw=cw, k_true=k_true)
-    o_ref[0] = bn_sign_bits_to_words(y, tau_ref[...], flip_ref[...])
-
-
-def _conv_accumulate(x_ref, w_ref, corr_ref, *, kh, kw, stride, oh, ow, cw,
-                     k_true):
-    """Shared body: gather taps in VMEM, popcount-accumulate, + correction.
-
-    Returns the (OH*OW, bn) int32 pre-epilogue conv output.
+    Per-plane the plane identity  x·w = 1/2 Σ_i 2^i (p̂_i ⊛ w + Σ_taps w)
+    holds, where the all-taps rowsum replaces BOTH the {0,1}->±1 shift and
+    the pad correction: a zero-padded pixel has every plane bit 0
+    (p̂ = −1), so its per-plane contribution (−Σw + Σw) vanishes exactly.
+    The C5 correction matrix is therefore identically zero and the plan
+    carries none (passing a bitplane plan to the ±1 conv ops fails
+    loudly rather than silently dropping the rowsum).
     """
-    x = x_ref[0]                    # (Hp, Wp, Cw) uint32, one padded image
-    w = w_ref[...]                  # (bn, KH*KW*Cw) uint32, tap-major
-    m = oh * ow
+    plan = make_conv_plan(w, input_hw=input_hw, stride=stride,
+                          padding=padding)
+    wsign = B.sign_pm1(w)
+    plan["rowsum"] = wsign.sum(axis=(1, 2, 3)).astype(jnp.int32)
+    del plan["correction"]
+    plan["nbits"] = nbits
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Block-size resolution (the knobs `ops.py` exposes)
+# ---------------------------------------------------------------------------
+
+def resolve_block_n(block_n: int | None, c_out: int) -> int:
+    """Validate/resolve the C_out block size.
+
+    ``None`` -> one lane group (128).  Explicit values must be positive
+    multiples of 128: silently *clamping up* a too-small user value used
+    to hide mis-tuned configs, so it is now an error (clamping *down* to
+    the padded C_out is still done — it only trims over-padding).
+    """
+    if block_n is None:
+        block_n = _LANE
+    check_block_lanes("block_n", block_n)
+    return min(block_n, _ceil_mult(c_out, _LANE))
+
+
+def resolve_block_oh(block_oh: int | None, oh: int, ow: int) -> int:
+    """Validate/resolve the M-tile height (output rows per tile).
+
+    ``None`` picks the largest row band whose flattened pixel count stays
+    within ``_DEFAULT_TILE_M`` (whole image when it fits — the untiled
+    pre-refactor grid).  Explicit values must be in [1, OH].
+    """
+    if block_oh is None:
+        return max(1, min(oh, _DEFAULT_TILE_M // max(ow, 1) or 1))
+    if not 1 <= block_oh:
+        raise ValueError(f"block_oh must be >= 1, got {block_oh}")
+    return min(block_oh, oh)
+
+
+# ---------------------------------------------------------------------------
+# The kernels
+# ---------------------------------------------------------------------------
+
+def _tile_slab(x_ref, prefix: tuple, *, block_oh: int, stride: int,
+               kh: int) -> jax.Array:
+    """Read this M tile's input row band out of the VMEM-resident image.
+
+    ``x_ref``: ref whose trailing dims are (Hp, Wp, Cw); ``prefix``
+    indexes the leading dims (batch slot / plane).  Tile ``m`` (grid dim
+    1) covers output rows [m·block_oh, (m+1)·block_oh), which read input
+    rows [m·block_oh·stride, m·block_oh·stride + (block_oh−1)·stride
+    + kh).  The ``pl.ds`` ref read loads ONLY the slab — the rest of the
+    image stays in VMEM untouched.  The host wrapper pads Hp so the last
+    tile's slab stays in bounds.
+    """
+    row0 = pl.program_id(1) * (block_oh * stride)
+    hblk = (block_oh - 1) * stride + kh
+    return x_ref[(*prefix, pl.ds(row0, hblk))]
+
+
+def _tap_mismatch(xs: jax.Array, w: jax.Array, *, kh, kw, stride, n_rows,
+                  ow, cw) -> jax.Array:
+    """In-VMEM im2col + XNOR-popcount mismatch accumulation.
+
+    ``xs``: ((n_rows−1)·stride + kh, Wp, Cw) input slab, ``w``: (bn,
+    KH·KW·Cw) tap-major packed weights.  Returns the (n_rows·ow, bn)
+    int32 total mismatch count over all taps and packed words.
+    """
+    m = n_rows * ow
     bn = w.shape[0]
     acc = jnp.zeros((m, bn), jnp.int32)
     for di in range(kh):
         for dj in range(kw):
             # The im2col gather for tap (di, dj): a strided slice of the
-            # VMEM-resident image — never materialized as a patch matrix.
+            # VMEM-resident slab — never materialized as a patch matrix.
             tap = jax.lax.slice(
-                x, (di, dj, 0),
-                (di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, cw),
-                (stride, stride, 1))                    # (OH, OW, Cw)
+                xs, (di, dj, 0),
+                (di + (n_rows - 1) * stride + 1,
+                 dj + (ow - 1) * stride + 1, cw),
+                (stride, stride, 1))                    # (n_rows, OW, Cw)
             a = tap.reshape(m, cw)
             base = (di * kw + dj) * cw
             for c in range(cw):
@@ -165,31 +243,117 @@ def _conv_accumulate(x_ref, w_ref, corr_ref, *, kh, kw, stride, oh, ow, cw,
                 # One full (m, bn) VPU op per packed word.
                 mism = jax.lax.population_count(aw ^ ww.reshape(1, bn))
                 acc = acc + mism.astype(jnp.int32)
-    return jnp.int32(k_true) - 2 * acc + corr_ref[...]
+    return acc
+
+
+def _conv_kernel(x_ref, w_ref, corr_ref, o_ref, *, kh, kw, stride, block_oh,
+                 ow, cw, k_true):
+    """In-kernel im2col + XNOR-popcount, int32 output tile."""
+    y = _conv_accumulate(x_ref, w_ref, corr_ref, kh=kh, kw=kw, stride=stride,
+                         block_oh=block_oh, ow=ow, cw=cw, k_true=k_true)
+    o_ref[0] = y
+
+
+def _conv_bn_sign_kernel(x_ref, w_ref, corr_ref, tau_ref, flip_ref, o_ref, *,
+                         kh, kw, stride, block_oh, ow, cw, k_true):
+    """Fused variant: conv -> BN-sign threshold -> re-bitpack (uint32)."""
+    y = _conv_accumulate(x_ref, w_ref, corr_ref, kh=kh, kw=kw, stride=stride,
+                         block_oh=block_oh, ow=ow, cw=cw, k_true=k_true)
+    o_ref[0] = bn_sign_bits_to_words(y, tau_ref[...], flip_ref[...])
+
+
+def _conv_accumulate(x_ref, w_ref, corr_ref, *, kh, kw, stride, block_oh, ow,
+                     cw, k_true):
+    """Shared body: slab-slice this tile, popcount-accumulate, + correction.
+
+    Returns the (block_oh·ow, bn) int32 pre-epilogue conv output tile.
+    """
+    xs = _tile_slab(x_ref, (0,), block_oh=block_oh, stride=stride, kh=kh)
+    mism = _tap_mismatch(xs, w_ref[...], kh=kh, kw=kw, stride=stride,
+                         n_rows=block_oh, ow=ow, cw=cw)
+    return jnp.int32(k_true) - 2 * mism + corr_ref[...]
+
+
+def _bitplane_conv_kernel(x_ref, w_ref, rowsum_ref, o_ref, *, kh, kw, stride,
+                          block_oh, ow, cw, k_true, nbits):
+    """Single-launch first-layer conv: in-kernel loop over bit planes.
+
+    ``x_ref``: (nbits, 1, Hp, Wp, Cw) — all planes of one batch element
+    resident in VMEM, so the plane loop re-reads the same block instead
+    of re-DMAing the image per plane.  The epilogue folds the 2^i plane
+    weighting and the rowsum pad/shift correction:
+
+        out = ( (2^n − 1)·(K + rowsum)  −  2·Σ_p 2^p·mism_p ) >> 1
+
+    which is  1/2 Σ_p 2^p (K − 2·mism_p + rowsum)  — the exact integer
+    identity of ``core.binarize.bitplane_dot`` per output pixel.  The
+    pre-shift value is always even, and >> on int32 is arithmetic, so
+    the halving is exact for negative accumulators too.
+    """
+    w = w_ref[...]
+    m = block_oh * ow
+    bn = w.shape[0]
+    wacc = jnp.zeros((m, bn), jnp.int32)
+    for p in range(nbits):
+        xs = _tile_slab(x_ref, (p, 0), block_oh=block_oh, stride=stride,
+                        kh=kh)
+        mism = _tap_mismatch(xs, w, kh=kh, kw=kw, stride=stride,
+                             n_rows=block_oh, ow=ow, cw=cw)
+        wacc = wacc + (mism << p)
+    full = jnp.int32((1 << nbits) - 1)
+    o_ref[0] = (full * (jnp.int32(k_true) + rowsum_ref[...])
+                - 2 * wacc) >> 1
 
 
 # ---------------------------------------------------------------------------
 # Host-side wrappers
 # ---------------------------------------------------------------------------
 
-def _prep_operands(x_packed, w_packed, correction, *, pads, c_out, block_n):
-    """Spatial zero-word padding (pad == all −1) + C_out block padding."""
-    xp = jnp.pad(x_packed, ((0, 0), pads[0], pads[1], (0, 0)),
+def _prep_operands(x_packed, w_packed, correction, *, pads, c_out, block_n,
+                   block_oh, stride, kh, out_hw):
+    """Stage every operand for the (batch, M tiles, C_out blocks) grid.
+
+    * spatial zero-word padding (pad == all −1) on the image, plus extra
+      zero rows so the last M tile's input slab stays in bounds,
+    * C_out padding on weights/correction up to the block size,
+    * OH padding on the correction up to a whole number of M tiles
+      (padded output rows are computed then discarded by the caller).
+
+    Works for both (B, H, W, Cw) images and (nbits, B, H, W, Cw) plane
+    stacks — spatial axes are the last three.  ``correction=None`` (the
+    bit-plane kernel, whose rowsum epilogue subsumes it) skips the
+    correction staging and returns None in its slot.
+    """
+    lead = x_packed.ndim - 3
+    xp = jnp.pad(x_packed,
+                 ((0, 0),) * lead + (pads[0], pads[1], (0, 0)),
                  constant_values=0)
+    oh, ow = out_hw
+    m_tiles = -(-oh // block_oh)
+    oh_p = m_tiles * block_oh
+    need_h = (oh_p - 1) * stride + kh
+    extra_h = max(0, need_h - xp.shape[lead])
+    if extra_h:
+        xp = jnp.pad(xp, ((0, 0),) * lead + ((0, extra_h), (0, 0), (0, 0)),
+                     constant_values=0)
     c_out_p = _ceil_mult(c_out, block_n)
     w_p = B.pad_to_multiple(w_packed, block_n, 0)
-    oh, ow = correction.shape[:2]
-    corr = B.pad_to_multiple(correction.reshape(oh * ow, c_out), block_n, 1)
-    return xp, w_p, corr, c_out_p
+    corr = None
+    if correction is not None:
+        corr = B.pad_to_multiple(correction.reshape(oh, ow, c_out),
+                                 block_oh, 0)             # (OH_p, OW, C)
+        corr = B.pad_to_multiple(corr.reshape(oh_p * ow, c_out), block_n, 1)
+    return xp, w_p, corr, c_out_p, m_tiles, oh_p
 
 
 @functools.partial(jax.jit, static_argnames=(
     "kh", "kw", "stride", "pads", "out_hw", "c_out", "k_true", "block_n",
-    "interpret"))
+    "block_oh", "interpret"))
 def binary_conv2d_packed(x_packed: jax.Array, w_packed: jax.Array,
                          correction: jax.Array, *, kh: int, kw: int,
                          stride: int, pads, out_hw: tuple[int, int],
-                         c_out: int, k_true: int, block_n: int = _LANE,
+                         c_out: int, k_true: int, block_n: int | None = None,
+                         block_oh: int | None = None,
                          interpret: bool = False) -> jax.Array:
     """Packed binary conv via Pallas; int32 output.
 
@@ -197,86 +361,158 @@ def binary_conv2d_packed(x_packed: jax.Array, w_packed: jax.Array,
     (C_out, KH*KW*Cw) tap-major packed weights (from ``make_conv_plan``).
     Returns (B, OH, OW, C_out) int32 — the exact integer conv of the ±1
     tensors with true zero padding (pad-as-(−1) + correction, paper C5).
+
+    ``block_oh``/``block_n`` tile the (OH·OW, C_out) output: the grid is
+    (B, ⌈OH/block_oh⌉, ⌈C_out/block_n⌉) and the result is invariant to
+    both knobs (property-tested in tests/test_conv_properties.py).
     """
     bsz = x_packed.shape[0]
     cw = x_packed.shape[-1]
     oh, ow = out_hw
-    block_n = max(_LANE, min(block_n, _ceil_mult(c_out, _LANE)))
-    xp, w_p, corr, c_out_p = _prep_operands(
+    block_n = resolve_block_n(block_n, c_out)
+    block_oh = resolve_block_oh(block_oh, oh, ow)
+    xp, w_p, corr, c_out_p, m_tiles, oh_p = _prep_operands(
         x_packed, w_packed, correction, pads=pads, c_out=c_out,
-        block_n=block_n)
+        block_n=block_n, block_oh=block_oh, stride=stride, kh=kh,
+        out_hw=out_hw)
     hp, wp = xp.shape[1:3]
-    grid = (bsz, c_out_p // block_n)
+    block_m = block_oh * ow
+    grid = (bsz, m_tiles, c_out_p // block_n)
 
     kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, stride=stride,
-                               oh=oh, ow=ow, cw=cw, k_true=k_true)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, cw), lambda b, j: (b, 0, 0, 0)),
-            pl.BlockSpec((block_n, kh * kw * cw), lambda b, j: (j, 0)),
-            pl.BlockSpec((oh * ow, block_n), lambda b, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, oh * ow, block_n),
-                               lambda b, j: (b, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((bsz, oh * ow, c_out_p), jnp.int32),
-        interpret=interpret,
-    )(xp, w_p, corr)
-    return out[..., :c_out].reshape(bsz, oh, ow, c_out)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "kh", "kw", "stride", "pads", "out_hw", "c_out", "k_true", "block_n",
-    "interpret"))
-def binary_conv2d_bn_sign_packed(x_packed: jax.Array, w_packed: jax.Array,
-                                 correction: jax.Array, tau: jax.Array,
-                                 flip: jax.Array, *, kh: int, kw: int,
-                                 stride: int, pads, out_hw: tuple[int, int],
-                                 c_out: int, k_true: int,
-                                 block_n: int = _LANE,
-                                 interpret: bool = False) -> jax.Array:
-    """Fused conv + BN-sign-fold + re-bitpack; packed uint32 output.
-
-    Same contraction as :func:`binary_conv2d_packed`, but the epilogue
-    thresholds against the folded BN (``tau``/``flip``, per C_out channel)
-    and packs the resulting ±1 bits along C_out — the activation never
-    leaves packed form in HBM.  Returns (B, OH, OW, ceil(C_out/32)) uint32,
-    bit-identical to ``pack_bits(apply_bn_sign_folded(conv_out))``.
-    """
-    bsz = x_packed.shape[0]
-    cw = x_packed.shape[-1]
-    oh, ow = out_hw
-    block_n = max(_LANE, min(block_n, _ceil_mult(c_out, _LANE)))
-    assert block_n % B.WORD_BITS == 0
-    xp, w_p, corr, c_out_p = _prep_operands(
-        x_packed, w_packed, correction, pads=pads, c_out=c_out,
-        block_n=block_n)
-    tau_p, flip_p = pad_bn_params(tau, flip, block_n)
-    hp, wp = xp.shape[1:3]
-    grid = (bsz, c_out_p // block_n)
-    bnw = block_n // B.WORD_BITS
-
-    kernel = functools.partial(_conv_bn_sign_kernel, kh=kh, kw=kw,
-                               stride=stride, oh=oh, ow=ow, cw=cw,
+                               block_oh=block_oh, ow=ow, cw=cw,
                                k_true=k_true)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, hp, wp, cw), lambda b, j: (b, 0, 0, 0)),
-            pl.BlockSpec((block_n, kh * kw * cw), lambda b, j: (j, 0)),
-            pl.BlockSpec((oh * ow, block_n), lambda b, j: (0, j)),
-            pl.BlockSpec((1, block_n), lambda b, j: (0, j)),
-            pl.BlockSpec((1, block_n), lambda b, j: (0, j)),
+            pl.BlockSpec((1, hp, wp, cw), lambda b, m, j: (b, 0, 0, 0)),
+            pl.BlockSpec((block_n, kh * kw * cw), lambda b, m, j: (j, 0)),
+            pl.BlockSpec((block_m, block_n), lambda b, m, j: (m, j)),
         ],
-        out_specs=pl.BlockSpec((1, oh * ow, bnw), lambda b, j: (b, 0, j)),
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda b, m, j: (b, m, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, oh_p * ow, c_out_p), jnp.int32),
+        interpret=interpret,
+    )(xp, w_p, corr)
+    return out[:, :oh * ow, :c_out].reshape(bsz, oh, ow, c_out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kh", "kw", "stride", "pads", "out_hw", "c_out", "k_true", "block_n",
+    "block_oh", "interpret"))
+def binary_conv2d_bn_sign_packed(x_packed: jax.Array, w_packed: jax.Array,
+                                 correction: jax.Array, tau: jax.Array,
+                                 flip: jax.Array, *, kh: int, kw: int,
+                                 stride: int, pads, out_hw: tuple[int, int],
+                                 c_out: int, k_true: int,
+                                 block_n: int | None = None,
+                                 block_oh: int | None = None,
+                                 interpret: bool = False) -> jax.Array:
+    """Fused conv + BN-sign-fold + re-bitpack; packed uint32 output.
+
+    Same contraction (and same M-tiled grid) as
+    :func:`binary_conv2d_packed`, but the epilogue thresholds against the
+    folded BN (``tau``/``flip``, per C_out channel) and packs the
+    resulting ±1 bits along C_out — the activation never leaves packed
+    form in HBM.  Returns (B, OH, OW, ceil(C_out/32)) uint32,
+    bit-identical to ``pack_bits(apply_bn_sign_folded(conv_out))``.
+    """
+    bsz = x_packed.shape[0]
+    cw = x_packed.shape[-1]
+    oh, ow = out_hw
+    block_n = resolve_block_n(block_n, c_out)
+    block_oh = resolve_block_oh(block_oh, oh, ow)
+    assert block_n % B.WORD_BITS == 0
+    xp, w_p, corr, c_out_p, m_tiles, oh_p = _prep_operands(
+        x_packed, w_packed, correction, pads=pads, c_out=c_out,
+        block_n=block_n, block_oh=block_oh, stride=stride, kh=kh,
+        out_hw=out_hw)
+    tau_p, flip_p = pad_bn_params(tau, flip, block_n)
+    hp, wp = xp.shape[1:3]
+    block_m = block_oh * ow
+    grid = (bsz, m_tiles, c_out_p // block_n)
+    bnw = block_n // B.WORD_BITS
+
+    kernel = functools.partial(_conv_bn_sign_kernel, kh=kh, kw=kw,
+                               stride=stride, block_oh=block_oh, ow=ow,
+                               cw=cw, k_true=k_true)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cw), lambda b, m, j: (b, 0, 0, 0)),
+            pl.BlockSpec((block_n, kh * kw * cw), lambda b, m, j: (j, 0)),
+            pl.BlockSpec((block_m, block_n), lambda b, m, j: (m, j)),
+            pl.BlockSpec((1, block_n), lambda b, m, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda b, m, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, bnw), lambda b, m, j: (b, m, j)),
         out_shape=jax.ShapeDtypeStruct(
-            (bsz, oh * ow, c_out_p // B.WORD_BITS), jnp.uint32),
+            (bsz, oh_p * ow, c_out_p // B.WORD_BITS), jnp.uint32),
         interpret=interpret,
     )(xp, w_p, corr, tau_p, flip_p)
     cw_out = B.packed_width(c_out)
-    return out[..., :cw_out].reshape(bsz, oh, ow, cw_out)
+    return out[:, :oh * ow, :cw_out].reshape(bsz, oh, ow, cw_out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kh", "kw", "stride", "pads", "out_hw", "c_out", "k_true", "nbits",
+    "block_n", "block_oh", "interpret"))
+def bitplane_conv2d_packed(x_planes: jax.Array, w_packed: jax.Array,
+                           rowsum: jax.Array, *, kh: int, kw: int,
+                           stride: int, pads, out_hw: tuple[int, int],
+                           c_out: int, k_true: int, nbits: int,
+                           block_n: int | None = None,
+                           block_oh: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """First-layer fixed-precision conv (paper C4) in ONE kernel launch.
+
+    ``x_planes``: (nbits, B, H, W, Cw) packed bit-plane images (from
+    ``core.binarize.pack_bitplanes_uint8`` — plane bit == packed bit, so
+    plane value 0 encodes the ±1 value −1).  ``rowsum``: (C_out,) int32
+    all-taps weight row sums (``make_bitplane_conv_plan``).  Returns
+    (B, OH, OW, C_out) int32 == the exact integer conv of the raw
+    fixed-precision input against sign(W) with true zero padding.
+
+    Replaces the model's previous 8 sequential per-plane conv launches:
+    all planes share one VMEM-resident image block and the plane loop,
+    2^i weighting, and pad correction live in the kernel epilogue.
+    """
+    nb, bsz = x_planes.shape[:2]
+    assert nb == nbits, (nb, nbits)
+    cw = x_planes.shape[-1]
+    oh, ow = out_hw
+    block_n = resolve_block_n(block_n, c_out)
+    block_oh = resolve_block_oh(block_oh, oh, ow)
+    xp, w_p, _, c_out_p, m_tiles, oh_p = _prep_operands(
+        x_planes, w_packed, None, pads=pads, c_out=c_out,
+        block_n=block_n, block_oh=block_oh, stride=stride, kh=kh,
+        out_hw=out_hw)
+    rs = B.pad_to_multiple(rowsum.reshape(1, c_out).astype(jnp.int32),
+                           block_n, 1)
+    hp, wp = xp.shape[2:4]
+    block_m = block_oh * ow
+    grid = (bsz, m_tiles, c_out_p // block_n)
+
+    kernel = functools.partial(_bitplane_conv_kernel, kh=kh, kw=kw,
+                               stride=stride, block_oh=block_oh, ow=ow,
+                               cw=cw, k_true=k_true, nbits=nbits)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nbits, 1, hp, wp, cw),
+                         lambda b, m, j: (0, b, 0, 0, 0)),
+            pl.BlockSpec((block_n, kh * kw * cw), lambda b, m, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda b, m, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda b, m, j: (b, m, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, oh_p * ow, c_out_p), jnp.int32),
+        interpret=interpret,
+    )(xp, w_p, rs)
+    return out[:, :oh * ow, :c_out].reshape(bsz, oh, ow, c_out)
 
 
 def _ceil_mult(x: int, m: int) -> int:

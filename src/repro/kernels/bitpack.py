@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import binarize as B
+from repro.kernels.fused_epilogue import (check_block_lanes,
+                                          check_block_sublanes)
 
 
 def _bitpack_kernel(x_ref, o_ref, *, block_kw: int):
@@ -43,8 +45,10 @@ def bitpack(x: jax.Array, *, block_m: int = 256, block_kw: int = 128,
     m, k = x.shape
     kw = B.packed_width(k)
 
-    block_m = max(8, min(block_m, _ceil_mult(m, 8)))
-    block_kw = max(128, min(block_kw, _ceil_mult(kw, 128)))
+    check_block_sublanes("block_m", block_m)
+    block_m = min(block_m, _ceil_mult(m, 8))
+    check_block_lanes("block_kw", block_kw)
+    block_kw = min(block_kw, _ceil_mult(kw, 128))
     block_k = block_kw * B.WORD_BITS
 
     # Pad K with -1.0 so padded positions encode to bit 0.

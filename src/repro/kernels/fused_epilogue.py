@@ -26,6 +26,28 @@ from repro.core import binarize as B
 _LANE = 128
 
 
+def check_block_lanes(name: str, value: int) -> None:
+    """Reject channel-axis block sizes the TPU lane layout can't honor.
+
+    Every channel-blocked kernel in this package tiles the minor axis in
+    lane groups of 128; a user block below (or not a multiple of) that
+    used to be silently clamped *up*, making the knob a no-op.  Raising
+    keeps mis-tuned configs visible (tests/test_conv_properties.py).
+    """
+    if value < _LANE or value % _LANE != 0:
+        raise ValueError(
+            f"{name} must be a positive multiple of {_LANE} (TPU lane "
+            f"granularity), got {value}")
+
+
+def check_block_sublanes(name: str, value: int) -> None:
+    """Same contract for sublane-axis (row) block sizes: multiples of 8."""
+    if value < 8 or value % 8 != 0:
+        raise ValueError(
+            f"{name} must be a positive multiple of 8 (TPU sublane "
+            f"granularity), got {value}")
+
+
 def bn_sign_bits_to_words(y: jax.Array, tau: jax.Array,
                           flip: jax.Array) -> jax.Array:
     """The epilogue contract, shared by every kernel that inlines it.
@@ -77,8 +99,10 @@ def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
     m, c = x.shape
     cw = B.packed_width(c)
 
-    block_m = max(8, min(block_m, _ceil_mult(m, 8)))
-    block_cw = max(_LANE, min(block_cw, _ceil_mult(cw, _LANE)))
+    check_block_sublanes("block_m", block_m)
+    block_m = min(block_m, _ceil_mult(m, 8))
+    check_block_lanes("block_cw", block_cw)
+    block_cw = min(block_cw, _ceil_mult(cw, _LANE))
     block_c = block_cw * B.WORD_BITS
 
     x_p = B.pad_to_multiple(B.pad_to_multiple(x, block_c, 1), block_m, 0)

@@ -79,7 +79,9 @@ def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
-                         backend: str = "auto") -> jax.Array:
+                         backend: str = "auto",
+                         block_oh: int | None = None,
+                         block_n: int | None = None) -> jax.Array:
     """Packed binary conv on a ``make_conv_plan`` plan.  Returns int32
 
     (B, OH, OW, C_out) — exact integer conv of the ±1 tensors with true
@@ -87,6 +89,9 @@ def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
 
     backend: 'pallas' (in-kernel im2col, no patch matrix in HBM) |
     'jnp'/'ref' (im2col outside, the pre-subsystem path) | 'auto'.
+    ``block_oh``/``block_n`` tile the Pallas grid over (OH rows, C_out);
+    ``None`` auto-sizes.  ``block_n`` must be a multiple of 128 — invalid
+    values raise instead of being silently clamped up.
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -94,7 +99,8 @@ def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
             x_packed, plan["w_packed"], plan["correction"],
             kh=plan["kh"], kw=plan["kw"], stride=plan["stride"],
             pads=plan["pads"], out_hw=plan["out_hw"], c_out=plan["c_out"],
-            k_true=plan["k_true"], interpret=not _on_tpu())
+            k_true=plan["k_true"], block_oh=block_oh, block_n=block_n,
+            interpret=not _on_tpu())
     return _ref.binary_conv2d_packed_ref(
         x_packed, plan["w_packed"], plan["correction"], kh=plan["kh"],
         kw=plan["kw"], stride=plan["stride"], pads=plan["pads"],
@@ -103,12 +109,15 @@ def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
 
 def binary_conv2d_bn_sign_packed(plan: dict, folded: dict,
                                  x_packed: jax.Array, *,
-                                 backend: str = "auto") -> jax.Array:
+                                 backend: str = "auto",
+                                 block_oh: int | None = None,
+                                 block_n: int | None = None) -> jax.Array:
     """Fused conv + BN-sign-fold + re-bitpack.  Returns packed uint32
 
     (B, OH, OW, ceil(C_out/32)) — the next binary conv layer's input,
     without the int32 activation ever leaving the kernel un-packed.
     ``folded``: {"tau", "flip"} from ``core.binary_layers.fold_bn_sign``.
+    Block knobs as in :func:`binary_conv2d_packed`.
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -116,12 +125,44 @@ def binary_conv2d_bn_sign_packed(plan: dict, folded: dict,
             x_packed, plan["w_packed"], plan["correction"], folded["tau"],
             folded["flip"], kh=plan["kh"], kw=plan["kw"],
             stride=plan["stride"], pads=plan["pads"], out_hw=plan["out_hw"],
-            c_out=plan["c_out"], k_true=plan["k_true"],
-            interpret=not _on_tpu())
+            c_out=plan["c_out"], k_true=plan["k_true"], block_oh=block_oh,
+            block_n=block_n, interpret=not _on_tpu())
     return _ref.binary_conv2d_bn_sign_packed_ref(
         x_packed, plan["w_packed"], plan["correction"], folded["tau"],
         folded["flip"], kh=plan["kh"], kw=plan["kw"], stride=plan["stride"],
         pads=plan["pads"], c_out=plan["c_out"], k_true=plan["k_true"])
+
+
+def bitplane_conv2d_packed(plan: dict, x_uint8: jax.Array, *,
+                           backend: str = "auto",
+                           block_oh: int | None = None,
+                           block_n: int | None = None) -> jax.Array:
+    """First-layer fixed-precision conv (paper C4) on a
+
+    ``make_bitplane_conv_plan`` plan.  ``x_uint8``: (B, H, W, C_in) raw
+    integer input.  Returns (B, OH, OW, C_out) int32 == the exact integer
+    conv of the raw input against sign(W) with true zero padding.
+
+    'pallas': plane extraction/packing is pure jnp bit ops
+    (``pack_bitplanes_uint8``) and the conv is ONE kernel launch — an
+    in-kernel plane loop over the VMEM-resident plane stack with the 2^i
+    weighting and rowsum pad correction folded into the epilogue.
+    'jnp'/'ref': the pre-fusion sequential 8-plane oracle.
+    """
+    backend = _resolve(backend)
+    nbits = plan["nbits"]
+    if backend == "pallas":
+        x_planes = B.pack_bitplanes_uint8(x_uint8, nbits)
+        return _bconv.bitplane_conv2d_packed(
+            x_planes, plan["w_packed"], plan["rowsum"], kh=plan["kh"],
+            kw=plan["kw"], stride=plan["stride"], pads=plan["pads"],
+            out_hw=plan["out_hw"], c_out=plan["c_out"],
+            k_true=plan["k_true"], nbits=nbits, block_oh=block_oh,
+            block_n=block_n, interpret=not _on_tpu())
+    return _ref.bitplane_conv2d_packed_ref(
+        x_uint8, plan["w_packed"], plan["rowsum"], kh=plan["kh"],
+        kw=plan["kw"], stride=plan["stride"], pads=plan["pads"],
+        c_out=plan["c_out"], k_true=plan["k_true"], nbits=nbits)
 
 
 def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,

@@ -82,6 +82,37 @@ def binary_conv2d_packed_ref(x_packed: jax.Array, w_packed: jax.Array,
     return out + correction[None]
 
 
+def bitplane_conv2d_packed_ref(x_uint8: jax.Array, w_packed: jax.Array,
+                               rowsum: jax.Array, *, kh: int, kw: int,
+                               stride: int, pads, c_out: int, k_true: int,
+                               nbits: int) -> jax.Array:
+    """Reference first-layer conv (paper C4): the 8-plane SEQUENTIAL path.
+
+    One packed conv per bit plane (plane bit b -> ±1 via 2b−1), recombined
+    with the plane identity  x·w = 1/2 Σ_i 2^i (p̂_i ⊛ w + rowsum)  where
+    the all-taps ``rowsum`` absorbs both the {0,1}->±1 shift and the
+    zero-pad correction (pad pixels have every plane bit 0 == −1).  This
+    is exactly what the model ran pre-fusion — the single-launch Pallas
+    kernel (``binary_conv.bitplane_conv2d_packed``) must match it
+    bit-for-bit, and both equal the integer conv of the raw input.
+    """
+    acc = None
+    zero_corr = None
+    for i in range(nbits):
+        plane = ((x_uint8.astype(jnp.uint32) >> i) & 1)
+        plane_pm1 = 2.0 * plane.astype(jnp.float32) - 1.0
+        xp = B.pack_bits(plane_pm1)
+        if zero_corr is None:
+            patches = extract_patches_packed(xp, kh, kw, stride, pads)
+            zero_corr = jnp.zeros(patches.shape[1:3] + (c_out,), jnp.int32)
+        d = binary_conv2d_packed_ref(xp, w_packed, zero_corr, kh=kh, kw=kw,
+                                     stride=stride, pads=pads, c_out=c_out,
+                                     k_true=k_true)
+        term = (d + rowsum[None, None, None, :]) << i
+        acc = term if acc is None else acc + term
+    return acc >> 1
+
+
 def bn_sign_pack_ref(x: jax.Array, tau: jax.Array,
                      flip: jax.Array) -> jax.Array:
     """Reference fused BN-sign + pack: threshold to ±1, then bit-pack."""

@@ -184,17 +184,18 @@ def pack_bcnn(params: dict, spec: BCNNSpec) -> dict:
     hws, _ = _stage_hw(spec)
     packed_convs = []
     for i, st in enumerate(spec.stages):
-        pc = L.pack_binary_conv2d(params["convs"][i], input_hw=hws[i],
-                                  stride=1, padding="SAME")
         if i == 0:
-            # First layer runs via bit-planes (C4): per-plane conv uses the
-            # plane identity  x.w = 1/2 sum_i 2^i (p̂_i conv w + sum_taps w)
-            # — the all-taps rowsum replaces BOTH the {0,1}->±1 shift and
-            # the pad correction (pads are plane-value 0 == p̂ = -1).
-            wsign = B.sign_pm1(params["convs"][i]["w"])
-            pc = dict(pc)
-            pc["rowsum"] = wsign.sum(axis=(1, 2, 3)).astype(jnp.int32)
-            pc["correction"] = jnp.zeros_like(pc["correction"])
+            # First layer runs via bit-planes (C4): the plan's rowsum
+            # absorbs both the {0,1}->±1 shift and the pad correction
+            # (pads are plane-value 0 == p̂ = -1), and the packed forward
+            # runs all planes in ONE fused kernel launch.
+            pc = L.pack_bitplane_conv2d(params["convs"][i],
+                                        input_hw=hws[i], stride=1,
+                                        padding="SAME",
+                                        nbits=spec.nbits_input)
+        else:
+            pc = L.pack_binary_conv2d(params["convs"][i], input_hw=hws[i],
+                                      stride=1, padding="SAME")
         packed_convs.append(pc)
     folded_conv = [L.fold_bn_sign(bn) for bn in params["conv_bns"]]
     # Bit-domain pooling masks (flip > 0 per channel) for pooled stages.
@@ -215,17 +216,14 @@ def pack_bcnn(params: dict, spec: BCNNSpec) -> dict:
 
 def _bitplane_conv_packed(pc: dict, x_uint8: jax.Array, nbits: int, *,
                           backend: str = "auto") -> jax.Array:
-    acc = None
-    for i in range(nbits):
-        plane = ((x_uint8.astype(jnp.uint32) >> i) & 1)
-        plane_pm1 = 2.0 * plane.astype(jnp.float32) - 1.0
-        xp = kops.bitpack(plane_pm1.reshape(-1, plane_pm1.shape[-1]),
-                          backend=backend)
-        xp = xp.reshape(*plane_pm1.shape[:-1], -1)
-        d = L.apply_binary_conv2d_packed(pc, xp, backend=backend)
-        term = (d + pc["rowsum"][None, None, None, :]) << i
-        acc = term if acc is None else acc + term
-    return acc >> 1
+    """Stage-0 conv on raw uint8 input: ONE kernel launch on the pallas
+
+    backend (in-kernel plane loop, 2^i weighting + rowsum correction in
+    the epilogue) — previously 8 sequential per-plane conv launches.
+    ``nbits`` must match the plan (kept as an argument for the call sites
+    / launch-count test)."""
+    assert nbits == pc["nbits"], (nbits, pc["nbits"])
+    return kops.bitplane_conv2d_packed(pc, x_uint8, backend=backend)
 
 
 def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,

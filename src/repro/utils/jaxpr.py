@@ -1,0 +1,46 @@
+"""Jaxpr inspection helpers shared by the benchmarks and the test suite.
+
+The kernel subsystem's evidence ("the bit-plane conv is ONE launch",
+"the patch matrix never hits HBM") is op-count-level: it comes from
+walking a traced jaxpr, recursing into nested (pjit) bodies.  Both the
+Table-3 benchmark and the property suite need the same walk, so it
+lives here.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                   # jax >= 0.6 moved these aliases
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+except ImportError:                    # jax <= 0.5
+    from jax.core import ClosedJaxpr, Jaxpr
+
+
+def subjaxprs(param):
+    """Yield every jaxpr nested inside one eqn param (lists included)."""
+    if isinstance(param, ClosedJaxpr):
+        yield param.jaxpr
+    elif isinstance(param, Jaxpr):
+        yield param
+    elif isinstance(param, (list, tuple)):
+        for e in param:
+            yield from subjaxprs(e)
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call primitives in ``fn``'s jaxpr — the
+    kernel-launch count of the traced fn, recursing into jit bodies."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+                continue
+            for p in eqn.params.values():
+                for sub in subjaxprs(p):
+                    n += walk(sub)
+        return n
+
+    return walk(closed.jaxpr)

@@ -1,11 +1,20 @@
-"""Import shim so the suite runs with or without ``hypothesis``.
+"""Property-testing layer: real ``hypothesis`` when installed, otherwise
+a small deterministic fallback engine with the same surface.
 
-``pytest.importorskip`` at module level would skip *every* test in a
-module, including the plain parametrized ones that don't need
-hypothesis.  Instead: re-export the real library when available, and
-otherwise substitute stubs where ``@hypothesis.given(...)`` turns the
-property test into a single skipped test and strategy constructors are
-inert.  Usage in test modules::
+CI installs hypothesis (requirements-dev.txt) and runs the suite with
+``--hypothesis-seed=0``; environments without it (e.g. a bare container)
+used to *skip* every property test via an inert shim.  The fallback now
+actually RUNS each property: strategies draw from a seeded
+``random.Random`` keyed on the test name, so the sampled shape grid is
+identical run-to-run and a failure reproduces immediately.  Supported
+surface (the subset ``tests/strategies.py`` uses): ``st.integers``,
+``st.floats``, ``st.booleans``, ``st.sampled_from``, ``st.just``,
+``st.one_of``, ``st.tuples``, ``st.lists``, ``.map``/``.filter``,
+``@hypothesis.given`` (keyword style) and
+``hypothesis.settings(max_examples=, deadline=)`` in either decorator
+order.
+
+Usage in test modules::
 
     from _hypothesis_compat import hypothesis, st
 """
@@ -14,33 +23,105 @@ from __future__ import annotations
 try:
     import hypothesis
     import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
+
+    import random
     import types
+    import zlib
 
-    import pytest
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
 
-    def _given(*_args, **_kwargs):
+    class _Strategy:
+        """A draw function ``random.Random -> value`` with map/filter."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda r: f(self._draw(r)))
+
+        def filter(self, pred):
+            def draw(r):
+                for _ in range(1000):
+                    v = self._draw(r)
+                    if pred(v):
+                        return v
+                raise RuntimeError("filter predicate rejected 1000 draws")
+            return _Strategy(draw)
+
+        def example(self):
+            return self._draw(random.Random(0))
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def _just(value):
+        return _Strategy(lambda r: value)
+
+    def _one_of(*strategies):
+        if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+            strategies = tuple(strategies[0])
+        return _Strategy(
+            lambda r: strategies[r.randrange(len(strategies))]._draw(r))
+
+    def _tuples(*strategies):
+        return _Strategy(lambda r: tuple(s._draw(r) for s in strategies))
+
+    def _lists(elements, *, min_size=0, max_size=8):
+        return _Strategy(lambda r: [elements._draw(r) for _ in
+                                    range(r.randint(min_size, max_size))])
+
+    def _given(**strategy_kwargs):
         def deco(fn):
-            def stub():
-                pytest.skip("hypothesis not installed "
-                            "(pip install -r requirements-dev.txt)")
-            stub.__name__ = fn.__name__
-            stub.__doc__ = fn.__doc__
-            return stub
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # read the inner signature and treat the strategy kwargs as
+            # fixtures.  The runner must look zero-argument.
+            def runner():
+                n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random(base + i)
+                    kwargs = {k: s._draw(rng)
+                              for k, s in strategy_kwargs.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"{kwargs!r}") from e
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            # Support BOTH decorator orders: @settings above @given sets
+            # _max_examples on the runner later; @given above @settings
+            # already set it on the inner fn — propagate it up.
+            if hasattr(fn, "_max_examples"):
+                runner._max_examples = fn._max_examples
+            return runner
         return deco
 
-    def _settings(*_args, **_kwargs):
+    def _settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
         def deco(fn):
+            fn._max_examples = max_examples
             return fn
         return deco
 
-    def _strategy(*_args, **_kwargs):
-        return None
-
     hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
     st = types.SimpleNamespace(
-        integers=_strategy, floats=_strategy, booleans=_strategy,
-        sampled_from=_strategy, lists=_strategy, tuples=_strategy,
-        just=_strategy, one_of=_strategy)
+        integers=_integers, booleans=_booleans, sampled_from=_sampled_from,
+        just=_just, one_of=_one_of, tuples=_tuples, lists=_lists,
+        floats=_floats)
 
-__all__ = ["hypothesis", "st"]
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

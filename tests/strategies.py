@@ -1,0 +1,79 @@
+"""Shared shape strategies for the kernel property suite.
+
+Every strategy is biased toward the awkward geometries the packed conv
+path must get bit-exact: C_in not a multiple of 32 (sub-word and
+multi-word ragged), 1x1 and even kernels, batch 1, odd spatial sizes,
+stride 2, VALID cropping.  Built on ``_hypothesis_compat`` so the same
+definitions drive real hypothesis in CI and the deterministic fallback
+engine elsewhere.
+"""
+from __future__ import annotations
+
+from collections import namedtuple
+
+from _hypothesis_compat import st
+
+ConvCase = namedtuple(
+    "ConvCase", "batch h w c_in c_out k stride padding")
+
+# Channel counts: sub-word (1, 3, 7, 20, 31), exact word (32, 64), and
+# multi-word ragged (33, 40) — the zero-bit-tail paths.
+AWKWARD_C_IN = (1, 3, 7, 20, 31, 32, 33, 40, 64)
+AWKWARD_C_OUT = (1, 5, 16, 31, 32, 33, 48)
+
+
+def _valid(case: ConvCase) -> bool:
+    # VALID padding needs the kernel to fit; SAME always produces output.
+    return case.padding == "SAME" or (case.k <= case.h and case.k <= case.w)
+
+
+def conv_cases(max_hw: int = 9) -> "st.SearchStrategy":
+    """(batch, H, W, C_in, C_out, k, stride, padding) conv geometries.
+
+    Batch 1, stride 1, and SAME are over-weighted (the paper's serving
+    shape) but stride 2 / VALID / batch 2 all stay in the sampled grid.
+    Spatial sizes span 4..max_hw including odd values.
+    """
+    return st.tuples(
+        st.sampled_from((1, 1, 2)),               # batch (batch-1 biased)
+        st.integers(4, max_hw),                   # H (odd included)
+        st.integers(4, max_hw),                   # W
+        st.sampled_from(AWKWARD_C_IN),
+        st.sampled_from(AWKWARD_C_OUT),
+        st.sampled_from((1, 2, 3, 3)),            # kernel (1x1 and even)
+        st.sampled_from((1, 1, 2)),               # stride
+        st.sampled_from(("SAME", "SAME", "VALID")),
+    ).map(lambda t: ConvCase(*t)).filter(_valid)
+
+
+def bitplane_conv_cases(max_hw: int = 8) -> "st.SearchStrategy":
+    """First-layer geometries: small C_in (image-like) plus ragged ones."""
+    return st.tuples(
+        st.sampled_from((1, 1, 2)),
+        st.integers(4, max_hw),
+        st.integers(4, max_hw),
+        st.sampled_from((1, 3, 4, 20, 33)),       # first-layer channels
+        st.sampled_from((1, 8, 16, 33)),
+        st.sampled_from((1, 3, 3)),
+        st.sampled_from((1, 1, 2)),
+        st.sampled_from(("SAME", "SAME", "VALID")),
+    ).map(lambda t: ConvCase(*t)).filter(_valid)
+
+
+def uint8_fill() -> "st.SearchStrategy":
+    """Input-image fill mode: random bytes or the uint8 edge values.
+
+    0 and 255 exercise the all-zero-plane and all-one-plane corners of
+    the bit-plane decomposition (255 = every plane bit set).
+    """
+    return st.sampled_from(("random", "random", "zeros", "max255"))
+
+
+def m_tilings() -> "st.SearchStrategy":
+    """block_oh choices: None (auto = untiled for small images), single
+    output row, and small bands that leave a ragged last tile."""
+    return st.sampled_from((None, 1, 2, 3))
+
+
+def seeds() -> "st.SearchStrategy":
+    return st.integers(0, 2**31 - 1)
