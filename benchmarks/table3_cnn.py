@@ -147,6 +147,12 @@ def rows() -> list[tuple]:
         t = _time(f_l1, x, reps=reps)
         out.append((f"table3/{tag}_bitplane_l1_fwd_{backend}", t, note))
 
+    # Sharded forward, one row per mesh shape: bit-exactness + collective
+    # profile + steady-state wall time on a forced-8-device CPU mesh.
+    # Device count is fixed at jax init, so the sweep runs in its own
+    # process (repro.distributed.verify_sharded, same as the CI job).
+    out.extend(sharded_rows())
+
     # Full paper architecture: memory only (params), fwd at batch 1.
     if not SMOKE:
         spec = cnn.BCNNSpec()
@@ -167,6 +173,25 @@ def rows() -> list[tuple]:
         out.append(("table3/bcnn32_packed_fwd_b1", _time(f32, x32, reps=1),
                     "full paper CNN, packed path"))
     return out
+
+
+def sharded_rows() -> list[tuple]:
+    """Per-mesh-shape rows for the sharded packed forward (subprocess)."""
+    from repro.distributed.subproc import run_verifier
+    try:
+        results = run_verifier()
+    except Exception as e:                          # record, don't crash
+        return [("table3/sharded_fwd_error", -1.0, f"{e!r}"[:300])]
+    rows = []
+    for r in results:
+        d, m = r["mesh"]
+        coll = r["collective_kinds"] or {}
+        rows.append((
+            f"table3/sharded_{r['kind']}_fwd_mesh{d}x{m}_{r['backend']}",
+            r["fwd_us"],
+            f"bitexact={r['bitexact']} shards={r['shard_plan']} "
+            f"collectives={coll or 'none'} (8 forced CPU devices)"))
+    return rows
 
 
 def write_bench_json(rs: list[tuple], path="experiments/BENCH_table3_cnn.json"

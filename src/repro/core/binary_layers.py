@@ -208,6 +208,23 @@ def apply_binary_conv2d_bn_packed(packed: Params, folded: Params,
                                              backend=backend)
 
 
+def localize_conv_plan(plan: Params, n_shards: int) -> Params:
+    """Per-shard view of a conv plan whose C_out axis is split ``n_shards``
+    ways (the C_out-parallel sharded forward, XNOR-Net-style decomposition).
+
+    The array leaves (``w_packed``, ``correction``, ``rowsum``) arrive
+    already sliced by the partitioner — only the static ``c_out`` needs
+    rewriting so the kernel dispatch sees the LOCAL output-channel count.
+    ``k_true``, geometry, and ``cw`` are contraction-side statics and stay
+    global: every shard consumes the full input.
+    """
+    if n_shards == 1:
+        return plan
+    c_out = plan["c_out"]
+    assert c_out % n_shards == 0, (c_out, n_shards)
+    return {**plan, "c_out": c_out // n_shards}
+
+
 # ---------------------------------------------------------------------------
 # First-layer bit-plane conv (paper §4.3 / C4)
 # ---------------------------------------------------------------------------

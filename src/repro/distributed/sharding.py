@@ -303,3 +303,272 @@ def logical_activation_spec(mesh: Mesh, ndim: int, *,
         return _fit(mesh, (None, DATA_AXES) + (None,) * (ndim - 2),
                     (1 << 30,) * ndim)
     return _fit(mesh, (DATA_AXES,) + (None,) * (ndim - 1), (1 << 30,) * ndim)
+
+
+# --------------------------------------------------------------------------
+# Packed BCNN / BMLP forward (Espresso): C_out-parallel over 'model',
+# batch-parallel over 'data'
+# --------------------------------------------------------------------------
+#
+# Each output-channel shard of a packed stage owns its own packed weight
+# rows, folded BN thresholds (tau/flip), pad-correction columns, and
+# pool-mask words, so the conv + BN-sign + repack (+ bit-domain pool)
+# epilogue is embarrassingly parallel along C_out (XNOR-Net's
+# decomposition).  The one real seam is the C_out -> packed-word boundary
+# at bn_sign_pack: a shard can only emit its own 32-bit word span if its
+# channel range is word-aligned, i.e. c_out % (32 * |model|) == 0.
+# Stages that fail the test degrade to replication over 'model' (the
+# same divisibility-aware fallback philosophy as `_fit`), never to a
+# wrong answer.  Packed activations are batch-sharded over 'data' and
+# replicated over 'model'; the only cross-device traffic is the
+# word-aligned all-gather of PACKED words at sharded stage boundaries —
+# on the pure data-parallel path there are no collectives at all
+# (asserted on compiled HLO by distributed/verify_sharded.py).
+
+def packed_stage_shards(c_out: int, mesh: Mesh) -> int:
+    """C_out-parallel shard count for one packed stage.
+
+    The 'model' axis size when every shard owns whole 32-bit packed
+    words (``c_out % (32·|model|) == 0``), else 1 — the stage replicates
+    instead of splitting a word across devices.
+    """
+    from repro.core.binarize import WORD_BITS
+    nm = _axis_size(mesh, "model")
+    if nm > 1 and c_out % (WORD_BITS * nm) == 0:
+        return nm
+    return 1
+
+
+def bcnn_shard_plan(packed: Any, mesh: Mesh) -> dict:
+    """Per-stage shard counts for a ``pack_bcnn`` tree on ``mesh``.
+
+    The last dense layer always replicates: its int32 output feeds the
+    fp output batch-norm, not a word-packing epilogue.
+    """
+    conv = tuple(packed_stage_shards(p["c_out"], mesh)
+                 for p in packed["convs"])
+    douts = [p["w_packed"].shape[0] for p in packed["denses"]]
+    dense = tuple(packed_stage_shards(d, mesh) for d in douts[:-1]) + (1,)
+    return {"conv": conv, "dense": dense}
+
+
+def bmlp_shard_plan(packed: Any, mesh: Mesh) -> dict:
+    douts = [p["w_packed"].shape[0] for p in packed["layers"]]
+    layer = tuple(packed_stage_shards(d, mesh) for d in douts[:-1]) + (1,)
+    return {"layer": layer}
+
+
+def _is_array(leaf) -> bool:
+    import numpy as np
+    return isinstance(leaf, (jax.Array, np.ndarray))
+
+
+def _bcnn_spec_rule(shard_plan: dict):
+    """path-str + leaf -> PartitionSpec (or None for non-array statics)."""
+    conv, dense = shard_plan["conv"], shard_plan["dense"]
+
+    def rule(pstr: str, leaf) -> P | None:
+        if not _is_array(leaf):
+            return None
+        m = re.match(r"convs/(\d+)/(w_packed|correction|rowsum)$", pstr)
+        if m and conv[int(m.group(1))] > 1:
+            if m.group(2) == "correction":      # (OH, OW, C_out)
+                return P(None, None, "model")
+            return P("model") if leaf.ndim == 1 else P("model", None)
+        m = re.match(r"(folded_conv)/(\d+)/(tau|flip)$", pstr)
+        if m and conv[int(m.group(2))] > 1:
+            return P("model")
+        m = re.match(r"pool_masks/(\d+)$", pstr)
+        if m and conv[int(m.group(1))] > 1:
+            return P("model")                   # (Cw,) packed-word spans
+        m = re.match(r"denses/(\d+)/w_packed$", pstr)
+        if m and dense[int(m.group(1))] > 1:
+            return P("model", None)
+        m = re.match(r"folded_dense/(\d+)/(tau|flip)$", pstr)
+        if m and dense[int(m.group(1))] > 1:
+            return P("model")
+        return P()                              # replicate (bn_out, fallback)
+
+    return rule
+
+
+def _bmlp_spec_rule(shard_plan: dict):
+    layer = shard_plan["layer"]
+
+    def rule(pstr: str, leaf) -> P | None:
+        if not _is_array(leaf):
+            return None
+        m = re.match(r"layers/(\d+)/(w_packed|w_rowsum)$", pstr)
+        if m and layer[int(m.group(1))] > 1:
+            return P("model") if leaf.ndim == 1 else P("model", None)
+        m = re.match(r"folded/(\d+)/(tau|flip)$", pstr)
+        if m and layer[int(m.group(1))] > 1:
+            return P("model")
+        return P()
+
+    return rule
+
+
+def _packed_kind(packed: Any) -> str:
+    if "convs" in packed:
+        return "bcnn"
+    if "layers" in packed:
+        return "bmlp"
+    raise ValueError("not a pack_bcnn/pack_bmlp tree: "
+                     f"keys {sorted(packed)}")
+
+
+def _packed_rule(packed: Any, mesh: Mesh):
+    if _packed_kind(packed) == "bcnn":
+        return _bcnn_spec_rule(bcnn_shard_plan(packed, mesh))
+    return _bmlp_spec_rule(bmlp_shard_plan(packed, mesh))
+
+
+def _fitted_spec(mesh: Mesh, s: P, leaf) -> P:
+    """`_fit`-checked, trailing-None-normalized spec for one array leaf.
+
+    Placement (`shard_packed`), the shard_map in_specs, and the
+    advertised `packed_param_specs` map ALL go through this one
+    function, so a rule whose axis cannot divide the dim degrades to
+    replication everywhere consistently instead of failing to lower.
+    """
+    fitted = tuple(_fit(mesh, tuple(s) + (None,) * (leaf.ndim - len(s)),
+                        leaf.shape))
+    while fitted and fitted[-1] is None:            # P(None,..) == P()
+        fitted = fitted[:-1]
+    return P(*fitted)
+
+
+def packed_param_specs(packed: Any, mesh: Mesh) -> dict[str, P]:
+    """{'/'-joined path: PartitionSpec} for every array leaf of a packed
+    BCNN/BMLP tree — exactly the specs placement and shard_map use."""
+    rule = _packed_rule(packed, mesh)
+    out: dict[str, P] = {}
+
+    def visit(path, leaf):
+        s = rule(_path_str(path), leaf)
+        if s is not None:
+            out[_path_str(path)] = _fitted_spec(mesh, s, leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, packed)
+    return out
+
+
+def shard_packed(packed: Any, mesh: Mesh) -> Any:
+    """device_put every array leaf of a packed tree with its
+    NamedSharding (one-time placement, paper C2 spirit: pack once, place
+    once).  Statics (plan geometry ints, the spec dataclass) pass
+    through untouched."""
+    rule = _packed_rule(packed, mesh)
+
+    def put(path, leaf):
+        s = rule(_path_str(path), leaf)
+        if s is None:
+            return leaf
+        return jax.device_put(leaf,
+                              NamedSharding(mesh, _fitted_spec(mesh, s,
+                                                               leaf)))
+
+    return jax.tree_util.tree_map_with_path(put, packed)
+
+
+# `shard_bcnn` / `shard_bmlp`: explicit entry points (same placement,
+# kind-checked).
+def shard_bcnn(packed: Any, mesh: Mesh) -> Any:
+    assert _packed_kind(packed) == "bcnn"
+    return shard_packed(packed, mesh)
+
+
+def shard_bmlp(packed: Any, mesh: Mesh) -> Any:
+    assert _packed_kind(packed) == "bmlp"
+    return shard_packed(packed, mesh)
+
+
+def _partition_arrays(tree: Any):
+    """Split a mixed pytree into (array leaves, their paths, rebuild fn).
+
+    ``shard_map`` can only take arrays as operands; plan statics (ints,
+    pad tuples, the spec dataclass) are baked back in by ``rebuild``
+    inside the traced body.  One flatten produces both the operand list
+    and the path strings its specs are looked up by, so the two can
+    never disagree on leaf order.
+    """
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    is_arr = [_is_array(l) for _, l in leaves_p]
+    arrays = [l for (_, l), a in zip(leaves_p, is_arr) if a]
+    paths = [_path_str(p) for (p, _), a in zip(leaves_p, is_arr) if a]
+
+    def rebuild(arrs):
+        it = iter(arrs)
+        merged = [next(it) if a else l
+                  for (_, l), a in zip(leaves_p, is_arr)]
+        return jax.tree_util.tree_unflatten(treedef, merged)
+
+    return arrays, paths, rebuild
+
+
+class ShardedForward:
+    """Callable wrapper around the jitted shard_map'd packed forward.
+
+    Holds the device_put params so calls are ``fwd(x)``; exposes
+    ``.lower(x)`` for HLO inspection and ``.shard_plan`` for tests.
+    """
+
+    def __init__(self, jitted, arrays, shard_plan: dict, mesh: Mesh):
+        self._jitted = jitted
+        self._arrays = arrays
+        self.shard_plan = shard_plan
+        self.mesh = mesh
+
+    def __call__(self, x):
+        return self._jitted(self._arrays, x)
+
+    def lower(self, x):
+        return self._jitted.lower(self._arrays, x)
+
+
+def make_sharded_forward(packed: Any, mesh: Mesh, *,
+                         backend: str = "auto") -> ShardedForward:
+    """Shard-mapped packed BCNN/BMLP forward on a ('data', 'model') mesh.
+
+    Batch shards over 'data'; every word-divisible stage C_out-shards
+    over 'model' (see :func:`packed_stage_shards`), with per-stage
+    degradation to replication otherwise.  Inside the conv stack the
+    only collectives are tiled all-gathers of PACKED words at sharded
+    stage seams — zero collectives on the pure data-parallel path.  The
+    batch must divide the 'data' axis size.  Bit-identical to the
+    single-device forward (distributed/verify_sharded.py sweeps mesh
+    shapes on a forced-8-device CPU platform).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.models import cnn as _cnn
+
+    kind = _packed_kind(packed)
+    rule = _packed_rule(packed, mesh)
+    plan = (bcnn_shard_plan(packed, mesh) if kind == "bcnn"
+            else bmlp_shard_plan(packed, mesh))
+    placed = shard_packed(packed, mesh)
+    arrays, arr_paths, rebuild = _partition_arrays(placed)
+    arr_specs = [_fitted_spec(mesh, rule(p, l), l)
+                 for p, l in zip(arr_paths, arrays)]
+
+    x_ndim = 4 if kind == "bcnn" else 2
+    x_spec = logical_activation_spec(mesh, x_ndim)
+    out_spec = logical_activation_spec(mesh, 2)
+    model_axis = "model" if _axis_size(mesh, "model") > 1 else None
+
+    def fwd(arrs, x):
+        p = rebuild(arrs)
+        if kind == "bcnn":
+            return _cnn.bcnn_forward_packed(
+                p, x, backend=backend, model_axis=model_axis,
+                conv_shards=plan["conv"], dense_shards=plan["dense"])
+        return _cnn.bmlp_forward_packed(
+            p, x, backend=backend, model_axis=model_axis,
+            layer_shards=plan["layer"])
+
+    sm = shard_map(fwd, mesh=mesh, in_specs=(arr_specs, x_spec),
+                   out_specs=out_spec, check_rep=False)
+    return ShardedForward(jax.jit(sm), arrays, plan, mesh)

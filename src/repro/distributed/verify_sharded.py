@@ -1,0 +1,150 @@
+"""Sharded packed-forward verifier: 8 forced CPU devices, own process.
+
+Proves, without hardware, that ``make_sharded_forward`` is
+
+* **bit-identical** to the single-device packed forward for every mesh
+  shape (data, model) in {(8,1), (4,2), (2,4)}, for both evaluation
+  networks (BCNN and BMLP), including a non-word-divisible stage that
+  exercises the per-stage replication fallback, and (one cell) the
+  Pallas backend in interpret mode under shard_map;
+* **collective-free on the data-parallel path**: the compiled HLO of the
+  (8, 1) mesh contains zero collectives (`utils.hlo.collective_bytes`);
+* **packed-words-only on the model path**: sharded meshes emit only
+  all-gathers (no all-reduce — the conv stack never crosses devices with
+  a partial sum or an un-packed int32 activation).
+
+Usage (the CI sharding job and tests/test_sharded_forward.py run this):
+
+    PYTHONPATH=src python -m repro.distributed.verify_sharded [--json]
+
+NOTE: the XLA_FLAGS line below must execute before ANY other import
+touches jax — keep it immediately after the docstring (same pattern as
+launch/dryrun.py).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_mesh
+from repro.models import cnn
+from repro.utils.hlo import collective_bytes, collective_kinds
+
+MESH_SHAPES = ((8, 1), (4, 2), (2, 4))
+BATCH = 8
+
+# Small nets that still hit every seam: stages word-divisible at every
+# model degree here (128 % (32·4) == 0 shards the bit-plane first stage
+# 4-ways; 64 % (32·2) == 0 shards only 2-ways), a stage (48, and 96 in
+# the MLP) that is NOT word-divisible for model > 1 (-> replication
+# fallback), a pooled sharded stage (bit-domain pool masks sharded), and
+# the grouped conv->dense flatten.
+BCNN_SPEC = cnn.BCNNSpec(
+    input_hw=(8, 8), c_in=3,
+    stages=(cnn.ConvStage(128), cnn.ConvStage(48, pool=True),
+            cnn.ConvStage(64, pool=True)),
+    dense=(128, 10))
+BMLP_SIZES = (784, 128, 96, 10)
+
+
+def _build(kind: str):
+    key = jax.random.PRNGKey(0)
+    if kind == "bcnn":
+        params = cnn.init_bcnn(key, BCNN_SPEC)
+        packed = cnn.pack_bcnn(params, BCNN_SPEC)
+        x = jax.random.randint(jax.random.fold_in(key, 1),
+                               (BATCH, *BCNN_SPEC.input_hw, BCNN_SPEC.c_in),
+                               0, 256).astype(jnp.uint8)
+        want = cnn.bcnn_forward_packed(packed, x, backend="jnp")
+    else:
+        spec = cnn.BMLPSpec(sizes=BMLP_SIZES)
+        params = cnn.init_bmlp(key, spec)
+        packed = cnn.pack_bmlp(params, spec)
+        x = jax.random.randint(jax.random.fold_in(key, 1),
+                               (BATCH, BMLP_SIZES[0]), 0,
+                               256).astype(jnp.uint8)
+        want = cnn.bmlp_forward_packed(packed, x, backend="jnp")
+    return packed, x, np.asarray(want)
+
+
+def run_cells(backends=("jnp",), pallas_cell: bool = True) -> list[dict]:
+    assert len(jax.devices()) == 8, jax.devices()
+    built = {kind: _build(kind) for kind in ("bcnn", "bmlp")}
+    cells = []
+    for kind in ("bcnn", "bmlp"):
+        for shape in MESH_SHAPES:
+            for backend in backends:
+                cells.append((kind, shape, backend, *built[kind]))
+    if pallas_cell:
+        # Interpret-mode Pallas cells: the kernels themselves run
+        # per-shard under shard_map with local C_out/batch shapes —
+        # (4, 2) shards the conv stack (incl. the bit-plane stage 0 and
+        # a pooled stage), (2, 4) shards stage 0 four ways.
+        cells.append(("bcnn", (4, 2), "pallas", *built["bcnn"]))
+        cells.append(("bcnn", (2, 4), "pallas", *built["bcnn"]))
+
+    results = []
+    for kind, shape, backend, packed, x, want in cells:
+        mesh = make_mesh(shape, ("data", "model"))
+        fwd = SH.make_sharded_forward(packed, mesh, backend=backend)
+        t0 = time.monotonic()
+        got = np.asarray(jax.block_until_ready(fwd(x)))
+        t_first = time.monotonic() - t0
+        t0 = time.monotonic()
+        np.asarray(jax.block_until_ready(fwd(x)))
+        t_steady = time.monotonic() - t0
+        bitexact = bool((got == want).all())
+        hlo = fwd.lower(x).compile().as_text()
+        coll = collective_bytes(hlo)
+        kinds = collective_kinds(hlo)
+        rec = {
+            "kind": kind, "mesh": list(shape), "backend": backend,
+            "bitexact": bitexact,
+            "shard_plan": {k: list(v) for k, v in fwd.shard_plan.items()},
+            "collective_bytes": coll.get("total", 0.0),
+            "collective_kinds": kinds,
+            "fwd_first_us": t_first * 1e6, "fwd_us": t_steady * 1e6,
+            "ok": bitexact,
+        }
+        if shape[1] == 1:
+            # Pure data parallel: ZERO resharding collectives between
+            # conv stages (or anywhere else in the forward).
+            rec["ok"] &= coll.get("total", 0.0) == 0.0 and not kinds
+        else:
+            # Model parallel: packed-word all-gathers only — a partial
+            # sum (all-reduce) would mean the contraction crossed chips.
+            rec["ok"] &= set(kinds) <= {"all-gather"}
+        results.append(rec)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output only")
+    args = ap.parse_args()
+    results = run_cells()
+    if args.json:
+        print(json.dumps(results))
+    else:
+        for r in results:
+            print(f"{r['kind']} mesh={tuple(r['mesh'])} {r['backend']:6s} "
+                  f"bitexact={r['bitexact']} "
+                  f"coll={r['collective_kinds'] or 'none'} "
+                  f"shards={r['shard_plan']} "
+                  f"{'OK' if r['ok'] else 'FAIL'}")
+    bad = [r for r in results if not r["ok"]]
+    if bad:
+        raise SystemExit(f"{len(bad)} sharded-forward cells failed")
+
+
+if __name__ == "__main__":
+    main()

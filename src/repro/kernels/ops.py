@@ -25,6 +25,12 @@ def _on_tpu() -> bool:
 
 
 def _resolve(backend: str) -> str:
+    """Single point of backend resolution for EVERY public dispatcher.
+
+    Re-implementing the 'auto' check inline used to let a typo like
+    ``backend="pallsa"`` fall through to the jnp path silently; routing
+    everything here makes an unknown backend a loud ValueError.
+    """
     if backend == "auto":
         return "pallas" if _on_tpu() else "jnp"
     if backend not in ("pallas", "jnp", "ref"):
@@ -41,8 +47,7 @@ def binary_matmul(a: jax.Array, b: jax.Array, *,
 
     backend: 'pallas' | 'jnp' | 'ref' | 'auto' (pallas on TPU, jnp else).
     """
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = _resolve(backend)
     if backend == "ref":
         return _ref.binary_matmul_ref(a, b)
     k = a.shape[-1]
@@ -54,8 +59,7 @@ def binary_matmul(a: jax.Array, b: jax.Array, *,
 def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
                          k_true: int, backend: str = "auto") -> jax.Array:
     """Binary GEMM on pre-packed operands (weights packed once, paper C2)."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = _resolve(backend)
     if backend == "pallas":
         return _bmm.binary_matmul_packed(a_packed, b_packed, k_true=k_true,
                                          interpret=not _on_tpu())
@@ -64,8 +68,7 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
 
 def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     """Sign-binarize + pack along the last axis -> uint32 words."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = _resolve(backend)
     if backend == "pallas":
         orig_shape = x.shape
         x2 = x.reshape(-1, orig_shape[-1])
@@ -183,7 +186,9 @@ def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
 
 
 def binary_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
-                  padding: str = "SAME", backend: str = "auto") -> jax.Array:
+                  padding: str = "SAME", backend: str = "auto",
+                  block_oh: int | None = None,
+                  block_n: int | None = None) -> jax.Array:
     """End-to-end binary conv on real-valued operands (mirrors
 
     ``binary_matmul``): sign-binarizes + channel-packs ``x``, packs ``w``
@@ -192,9 +197,11 @@ def binary_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     ``x``: (B, H, W, C_in) real, ``w``: (C_out, KH, KW, C_in) real.
     Returns (B, OH, OW, C_out) int32 == the integer dots of
     ``conv(sign(x), sign(w))`` with true zero padding.
+    ``block_oh``/``block_n`` forward to :func:`binary_conv2d_packed`.
     """
     plan = _bconv.make_conv_plan(w, input_hw=x.shape[1:3], stride=stride,
                                  padding=padding)
     x2 = x.reshape(-1, x.shape[-1])
     x_p = bitpack(x2, backend=backend).reshape(*x.shape[:-1], -1)
-    return binary_conv2d_packed(plan, x_p, backend=backend)
+    return binary_conv2d_packed(plan, x_p, backend=backend,
+                                block_oh=block_oh, block_n=block_n)

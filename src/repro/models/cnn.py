@@ -77,19 +77,46 @@ def pack_bmlp(params: dict, spec: BMLPSpec) -> dict:
             "bn_out": params["bns"][-1]}
 
 
+def _gather_packed(hp: jax.Array, axis_name: str) -> jax.Array:
+    """Reassemble a C_out-sharded PACKED activation along its word axis.
+
+    Inside the sharded forward each model shard packs its own span of
+    32-bit words (``bn_sign_pack`` on its local channels), so a tiled
+    all-gather along the trailing word axis reconstructs the exact
+    single-device word layout — this is the ONLY cross-device traffic in
+    the packed forward, and it moves 1-bit words, never the int32
+    pre-threshold activation.
+    """
+    return jax.lax.all_gather(hp, axis_name, axis=hp.ndim - 1, tiled=True)
+
+
 def bmlp_forward_packed(packed: dict, x_uint8: jax.Array, *,
-                        backend: str = "auto") -> jax.Array:
+                        backend: str = "auto", model_axis: str | None = None,
+                        layer_shards: tuple[int, ...] | None = None
+                        ) -> jax.Array:
     """Optimized forward: bit-plane first layer (C4), packed GEMMs (C1),
 
     folded BN+sign thresholds between layers (no fp math until the output
-    BN)."""
+    BN).
+
+    When called per-shard inside ``shard_map`` (see
+    ``distributed.sharding.make_sharded_forward``), ``layer_shards[i]``
+    says how many ways layer ``i``'s d_out is split over ``model_axis``;
+    a sharded layer computes its local output columns and the packed
+    bits are all-gathered (word-aligned) before the next GEMM.  The
+    final layer is always replicated (its output feeds the fp BN).
+    """
     n = len(packed["layers"])
+    shards = layer_shards or (1,) * n
+    assert shards[-1] == 1, "output layer must stay replicated"
     z = L.apply_bitplane_dense_packed(packed["layers"][0], x_uint8,
                                       backend=backend)
     for i in range(n - 1):
         # Fused threshold + re-bitpack: the ±1 activation never appears.
         hp = L.apply_bn_sign_folded_packed(packed["folded"][i], z,
                                            backend=backend)
+        if shards[i] > 1:
+            hp = _gather_packed(hp, model_axis)
         if i + 1 < n:
             z = L.apply_binary_dense_prepacked(packed["layers"][i + 1], hp,
                                                backend=backend)
@@ -227,7 +254,10 @@ def _bitplane_conv_packed(pc: dict, x_uint8: jax.Array, nbits: int, *,
 
 
 def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
-                        backend: str = "auto") -> jax.Array:
+                        backend: str = "auto", model_axis: str | None = None,
+                        conv_shards: tuple[int, ...] | None = None,
+                        dense_shards: tuple[int, ...] | None = None
+                        ) -> jax.Array:
     """Optimized forward: after the bit-plane first stage, every
 
     inter-layer activation stays bit-packed in HBM end-to-end — fused
@@ -235,24 +265,44 @@ def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
     max-pooling (OR/AND under the flip mask), and pre-packed GEMMs
     through the dense stack.  Thresholding before pooling is exact
     because the folded BN-sign compare is monotone per channel.
+
+    Sharded execution (per-shard body under ``shard_map``, built by
+    ``distributed.sharding.make_sharded_forward``): ``conv_shards[i]`` /
+    ``dense_shards[i]`` give the C_out-parallel split of each stage over
+    ``model_axis``.  A sharded stage owns its own packed weight rows,
+    folded BN thresholds, correction columns, and pool-mask words — the
+    conv + BN-sign + repack (+ bit-domain pool) epilogue is fully local
+    — and ends with a word-aligned all-gather of the PACKED activation
+    so the next stage (which contracts over all input channels) sees the
+    full image.  The conv→dense flatten needs no special casing: the
+    last conv stage's gather restores the exact single-device word
+    layout the grouped dense packing was built against.
     """
     spec: BCNNSpec = packed["spec"]
     n_conv = len(packed["convs"])
+    conv_shards = conv_shards or (1,) * n_conv
+    dense_shards = dense_shards or (1,) * len(packed["denses"])
+    assert dense_shards[-1] == 1, "output layer must stay replicated"
     # Stage 0 accumulates 8 bit-plane convs in int32, so its epilogue runs
     # standalone: pool on int32, then fused threshold + re-bitpack.
-    z = _bitplane_conv_packed(packed["convs"][0], x_uint8,
-                              spec.nbits_input, backend=backend)
+    z = _bitplane_conv_packed(
+        L.localize_conv_plan(packed["convs"][0], conv_shards[0]), x_uint8,
+        spec.nbits_input, backend=backend)
     if spec.stages[0].pool:
         z = L.maxpool2d(z)
     hp = L.apply_bn_sign_folded_packed(packed["folded_conv"][0], z,
                                        backend=backend)
+    if conv_shards[0] > 1:
+        hp = _gather_packed(hp, model_axis)
     # Stages 1..n-1: packed in, packed out — zero un-packed activations.
     for i in range(1, n_conv):
         hp = L.apply_binary_conv2d_bn_packed(
-            packed["convs"][i], packed["folded_conv"][i], hp,
-            backend=backend)
+            L.localize_conv_plan(packed["convs"][i], conv_shards[i]),
+            packed["folded_conv"][i], hp, backend=backend)
         if spec.stages[i].pool:
             hp = L.maxpool2d_packed(hp, packed["pool_masks"][i])
+        if conv_shards[i] > 1:
+            hp = _gather_packed(hp, model_axis)
     h = hp.reshape(hp.shape[0], -1)         # packed (B, fh*fw*Cw) words
     n = len(packed["denses"])
     for i in range(n):
@@ -261,4 +311,6 @@ def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
         if i < n - 1:
             h = L.apply_bn_sign_folded_packed(packed["folded_dense"][i], z,
                                               backend=backend)
+            if dense_shards[i] > 1:
+                h = _gather_packed(h, model_axis)
     return L.apply_batchnorm(packed["bn_out"], z)

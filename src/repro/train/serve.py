@@ -42,6 +42,7 @@ class Request:
     prompt: jax.Array          # (S,) int32
     max_new: int
     out: list = dataclasses.field(default_factory=list)
+    truncated: bool = False    # hit the cache length before max_new tokens
 
 
 class BatchedServer:
@@ -64,16 +65,53 @@ class BatchedServer:
         self.active: dict[int, Request] = {}
         self.idx = 0
 
+    def _reset_slot(self, s: int) -> None:
+        """Zero the freed slot's cache rows (K/V and recurrent state).
+
+        A reused slot would otherwise inherit the previous request's rows
+        at positions < self.idx — the new occupant's attention reads them.
+        Cache leaves are (L, B, ...) with the slot axis at 1.
+
+        Zeroing removes the cross-request information leak (zero V rows
+        contribute a zero vector), but the decode mask is global
+        (j <= idx), so the zeroed positions still take softmax weight and
+        dilute the new occupant's attention vs decoding it alone.  Exact
+        isolation needs a per-slot start-position mask in the attention
+        step — out of scope for this Python-level driver.
+        """
+        self.cache = jax.tree.map(
+            lambda a: a.at[:, s].set(jnp.zeros_like(a[:, s]))
+            if hasattr(a, "ndim") and a.ndim >= 2 and a.shape[1] == self.slots
+            else a,
+            self.cache)
+
     def submit_and_run(self, requests: list[Request]) -> list[Request]:
         """Greedy decode all requests (prompts are consumed token-by-token
         — teacher-forcing the prompt through the decode path keeps this
-        driver cache-layout agnostic)."""
+        driver cache-layout agnostic).
+
+        Every submitted request appears in the return value: either
+        completed (``max_new`` tokens) or flagged ``truncated=True`` when
+        the shared cache ran out of positions before it finished (requests
+        still queued at that point come back truncated with empty output).
+        """
         queue = list(requests)
+        # Resubmitting a truncated request is the natural retry: restart
+        # it cleanly (its prompt is re-decoded, so stale tokens from the
+        # aborted window must not count toward max_new).
+        for r in queue:
+            r.out = []
+            r.truncated = False
         done: list[Request] = []
         slot_req: dict[int, Request] = {}
         tok = jnp.zeros((self.slots, 1), jnp.int32)
         pos = [0] * self.slots
-        while queue or slot_req:
+        # Every slot was freed AND reset when the previous call returned,
+        # so each call starts a fresh cache window — without this, one
+        # exhausting call would leave idx == max_len forever and every
+        # later call would return instantly, all-truncated.
+        self.idx = 0
+        while (queue or slot_req) and self.idx < self.max_len:
             for s in range(self.slots):
                 if s not in slot_req and queue:
                     slot_req[s] = queue.pop(0)
@@ -99,7 +137,15 @@ class BatchedServer:
                     if len(r.out) >= r.max_new:
                         done.append(r)
                         del slot_req[s]
+                        self._reset_slot(s)
             self.idx += 1
-            if self.idx >= self.max_len:
-                break
+        # Cache exhausted: account for every in-flight and queued request,
+        # and scrub the abandoned slots so the next call starts clean.
+        for s, r in list(slot_req.items()):
+            r.truncated = True
+            done.append(r)
+            self._reset_slot(s)
+        for r in queue:
+            r.truncated = True
+            done.append(r)
         return done

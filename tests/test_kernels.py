@@ -83,6 +83,56 @@ def test_bitpack_property(m, k, seed):
                                   np.asarray(ref.bitpack_ref(x)))
 
 
+def test_every_public_op_rejects_unknown_backend():
+    """Regression: dispatchers used to re-implement 'auto' resolution
+    inline, so a typo like backend='pallsa' silently ran the jnp path.
+    Every public op must now raise through _resolve."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (4, 64))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (1, 6, 6, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 3), (16, 3, 3, 8))
+    xu = jax.random.randint(jax.random.fold_in(key, 4), (1, 6, 6, 3), 0,
+                            256).astype(jnp.uint8)
+    wu = jax.random.normal(jax.random.fold_in(key, 5), (16, 3, 3, 3))
+    from repro.kernels import binary_conv as BC
+    plan = BC.make_conv_plan(w, input_hw=(6, 6))
+    bplan = BC.make_bitplane_conv_plan(wu, input_hw=(6, 6))
+    x_p = B.pack_bits(x)
+    folded = {"tau": jnp.zeros((16,)), "flip": jnp.ones((16,))}
+    calls = [
+        lambda be: ops.binary_matmul(a, b, backend=be),
+        lambda be: ops.binary_matmul_packed(B.pack_bits(a), B.pack_bits(b),
+                                            k_true=64, backend=be),
+        lambda be: ops.bitpack(a, backend=be),
+        lambda be: ops.binary_conv2d_packed(plan, x_p, backend=be),
+        lambda be: ops.binary_conv2d_bn_sign_packed(plan, folded, x_p,
+                                                    backend=be),
+        lambda be: ops.bitplane_conv2d_packed(bplan, xu, backend=be),
+        lambda be: ops.bn_sign_pack(jnp.zeros((2, 16), jnp.int32),
+                                    folded["tau"], folded["flip"],
+                                    backend=be),
+        lambda be: ops.binary_conv2d(x, w, backend=be),
+    ]
+    for call in calls:
+        with pytest.raises(ValueError, match="unknown backend"):
+            call("pallsa")
+
+
+def test_binary_conv2d_wrapper_forwards_block_knobs():
+    """The convenience wrapper must reach the same tiling validation as
+    the packed entry points: an off-lane block_n raises, a valid pair
+    changes nothing."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, 6, 6, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 3, 3, 8))
+    with pytest.raises(ValueError):
+        ops.binary_conv2d(x, w, backend="pallas", block_n=64)
+    want = ops.binary_conv2d(x, w, backend="pallas")
+    got = ops.binary_conv2d(x, w, backend="pallas", block_oh=2, block_n=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_ops_auto_backend_cpu_is_jnp():
     a = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
     b = jax.random.normal(jax.random.PRNGKey(1), (4, 64))

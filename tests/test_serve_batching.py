@@ -1,0 +1,91 @@
+"""BatchedServer request accounting + slot-cache hygiene.
+
+Regression for two silent-loss bugs: requests in flight (or still
+queued) when the shared cache ran out of positions were returned in
+NEITHER ``done`` nor an error, and a freed slot's next occupant
+inherited the previous request's stale KV rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.train import serve as SV
+
+
+def _server(slots=2, max_len=8):
+    cfg = get_config("starcoder2-3b", reduced=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return SV.BatchedServer(cfg, params, slots, max_len)
+
+
+def _reqs(n, prompt_len=2, max_new=2):
+    return [SV.Request(rid=i,
+                       prompt=jnp.arange(prompt_len, dtype=jnp.int32) + i,
+                       max_new=max_new)
+            for i in range(n)]
+
+
+def test_every_request_accounted_for():
+    """More requests than the cache can serve: completed ones come back
+    finished, the rest come back flagged truncated (never dropped)."""
+    srv = _server(slots=2, max_len=5)
+    reqs = _reqs(5, prompt_len=2, max_new=2)
+    out = srv.submit_and_run(reqs)
+    assert {r.rid for r in out} == {r.rid for r in reqs}
+    finished = [r for r in out if not r.truncated]
+    truncated = [r for r in out if r.truncated]
+    assert finished and truncated
+    for r in finished:
+        assert len(r.out) == r.max_new
+    for r in truncated:
+        assert len(r.out) < r.max_new       # includes never-started (0)
+
+
+def test_all_complete_when_cache_suffices():
+    srv = _server(slots=2, max_len=16)
+    out = srv.submit_and_run(_reqs(4, prompt_len=2, max_new=2))
+    assert len(out) == 4
+    assert all(not r.truncated and len(r.out) == 2 for r in out)
+
+
+def test_server_survives_exhaustion_and_retries_truncated():
+    """A call that exhausts the cache must not leave the server dead:
+    the next call starts a fresh window, and resubmitting the truncated
+    requests restarts them cleanly (stale partial output discarded, flag
+    cleared) rather than splicing tokens from the aborted window."""
+    srv = _server(slots=2, max_len=5)
+    first = srv.submit_and_run(_reqs(5, prompt_len=2, max_new=2))
+    retry = [r for r in first if r.truncated]
+    assert retry
+    second = srv.submit_and_run(retry[:2])
+    assert len(second) == 2
+    assert all(not r.truncated and len(r.out) == 2 for r in second)
+
+
+def test_freed_slot_cache_is_reset():
+    """After a request completes, its slot's cache rows are zeroed so the
+    next occupant can't read the previous request's KV state."""
+    srv = _server(slots=2, max_len=16)
+    srv.submit_and_run(_reqs(2, prompt_len=2, max_new=2))
+    for leaf in jax.tree.leaves(srv.cache):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+                leaf.shape[1] == srv.slots:
+            assert not np.asarray(leaf[:, 0]).any()
+            assert not np.asarray(leaf[:, 1]).any()
+
+
+def test_reset_slot_is_slot_local():
+    srv = _server(slots=2, max_len=8)
+    srv.cache = jax.tree.map(
+        lambda a: jnp.ones_like(a) if hasattr(a, "ndim") else a, srv.cache)
+    srv._reset_slot(0)
+    touched = False
+    for leaf in jax.tree.leaves(srv.cache):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+                leaf.shape[1] == srv.slots:
+            assert not np.asarray(leaf[:, 0]).any()
+            assert np.asarray(leaf[:, 1]).all()
+            touched = True
+    assert touched
