@@ -147,6 +147,9 @@ def rows() -> list[tuple]:
         t = _time(f_l1, x, reps=reps)
         out.append((f"table3/{tag}_bitplane_l1_fwd_{backend}", t, note))
 
+    # Dense megakernel suite evidence (BMLP hidden stack + GEMV serving).
+    out.extend(bmlp_rows())
+
     # Sharded forward, one row per mesh shape: bit-exactness + collective
     # profile + steady-state wall time on a forced-8-device CPU mesh.
     # Device count is fixed at jax init, so the sweep runs in its own
@@ -172,6 +175,104 @@ def rows() -> list[tuple]:
                                                         backend="jnp"))
         out.append(("table3/bcnn32_packed_fwd_b1", _time(f32, x32, reps=1),
                     "full paper CNN, packed path"))
+    return out
+
+
+def bmlp_rows() -> list[tuple]:
+    """Dense megakernel rows (paper §6.2 / Table 2 shapes on the Table-3
+    evidence format): fused vs unfused hidden dense layer with
+    max-intermediate-HBM evidence (the int32 (M, N) activation drops to
+    packed uint32 words), single-launch vs per-layer hidden stack, and
+    the batch-1 GEMV serving shape."""
+    key = jax.random.PRNGKey(2)
+    if SMOKE:
+        spec = cnn.BMLPSpec(sizes=(64, 128, 128, 128, 10))
+        reps, tag = 1, "bmlp128"
+    else:
+        spec = cnn.BMLPSpec()                 # 784-4096-4096-4096-10
+        reps, tag = 1, "bmlp4096"
+    params = cnn.init_bmlp(key, spec)
+    packed = cnn.pack_bmlp(params, spec)
+    n_layers = len(packed["layers"])
+    hidden = list(range(1, n_layers - 1))
+    stages = [{"w_packed": packed["layers"][i]["w_packed"],
+               "k_true": packed["layers"][i]["k_true"],
+               "tau": packed["folded"][i]["tau"],
+               "flip": packed["folded"][i]["flip"]} for i in hidden]
+    layer0, folded0 = packed["layers"][hidden[0]], packed["folded"][hidden[0]]
+    out = []
+
+    # Fused epilogue vs separate GEMM -> bn_sign_pack on one hidden
+    # layer: wall time and the largest HBM intermediate.  Unfused stages
+    # the full int32 (M, N) activation between the two launches; fused
+    # emits packed words straight from the kernel flush.
+    mb = 16 if SMOKE else 64
+    xh = kops.bitpack(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (mb, layer0["k_true"])),
+                      backend="jnp")
+
+    def unfused(v):
+        z = kops.binary_matmul_packed(v, layer0["w_packed"],
+                                      k_true=layer0["k_true"],
+                                      backend="pallas")
+        return kops.bn_sign_pack(z, folded0["tau"], folded0["flip"],
+                                 backend="pallas")
+
+    def fused(v):
+        return kops.binary_matmul_bn_sign_packed(
+            v, layer0["w_packed"], folded0["tau"], folded0["flip"],
+            k_true=layer0["k_true"], backend="pallas")
+
+    for name, fn, what in (
+            ("unfused", unfused, "int32 (M, N) staged in HBM between the "
+             "GEMM and bn_sign_pack launches"),
+            ("fused", fused, "kernel flush emits packed uint32 words — "
+             "the int32 activation never leaves VMEM")):
+        nbytes, shape = _max_intermediate_bytes(fn, xh)
+        out.append((f"table3/bmlp_dense_max_intermediate_{name}",
+                    float(nbytes),
+                    f"largest HBM intermediate {shape} | {what}"))
+    t_unf = _time(jax.jit(unfused), xh, reps=reps)
+    t_fus = _time(jax.jit(fused), xh, reps=reps)
+    out.append((f"table3/{tag}_dense_hidden_fwd_unfused_b{mb}", t_unf,
+                "separate GEMM + bn_sign_pack launches (interpret)"))
+    out.append((f"table3/{tag}_dense_hidden_fwd_fused_b{mb}", t_fus,
+                f"{t_unf / t_fus:.2f}x vs unfused | fused epilogue "
+                "(interpret)"))
+
+    # Single-launch resident stack vs per-layer fused launches.
+    launches_auto = count_pallas_calls(
+        lambda v: kops.binary_dense_stack_packed(stages, v,
+                                                 backend="pallas"), xh)
+    launches_per = count_pallas_calls(
+        lambda v: kops.binary_dense_stack_packed(stages, v,
+                                                 backend="pallas",
+                                                 resident=False), xh)
+    out.append(("table3/bmlp_stack_kernel_launches", float(launches_auto),
+                f"{len(stages)} hidden layers in 1 pallas_call on the "
+                f"VMEM-resident path (per-layer fallback = {launches_per} "
+                "launches)"))
+    for mode, res, note in (("resident", True,
+                             "ONE launch, weights resident in VMEM"),
+                            ("per_layer", False,
+                             "one fused launch per hidden layer")):
+        f_stack = jax.jit(lambda v, r=res: kops.binary_dense_stack_packed(
+            stages, v, backend="pallas", resident=r))
+        out.append((f"table3/{tag}_hidden_stack_fwd_{mode}",
+                    _time(f_stack, xh, reps=reps), f"{note} (interpret)"))
+
+    # GEMV serving shape (paper §6.2): batch-1 forward takes the N-major
+    # grid in every dense GEMM + the resident hidden stack.
+    x1 = jax.random.randint(jax.random.fold_in(key, 3),
+                            (1, spec.sizes[0]), 0, 256).astype(jnp.uint8)
+    for backend, note in (
+            ("jnp", "host packed GEMMs (pre-subsystem path)"),
+            ("pallas", "N-major GEMV grid + single-launch resident "
+             "hidden stack (interpret)")):
+        f1 = jax.jit(lambda v, be=backend:
+                     cnn.bmlp_forward_packed(packed, v, backend=be))
+        out.append((f"table3/{tag}_gemv_fwd_b1_{backend}",
+                    _time(f1, x1, reps=reps), note))
     return out
 
 

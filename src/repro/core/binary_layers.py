@@ -98,6 +98,46 @@ def apply_binary_dense_prepacked(packed: Params, x_packed: jax.Array, *,
     return out.reshape(*lead, -1)
 
 
+def apply_binary_dense_bn_packed(packed: Params, folded: Params,
+                                 x_packed: jax.Array, *,
+                                 backend: str = "auto") -> jax.Array:
+    """Fused dense GEMM + BN-sign threshold + re-bitpack: packed in,
+
+    packed out (the dense analogue of ``apply_binary_conv2d_bn_packed``).
+    The (…, N) int32 activation never appears un-packed in HBM.  Returns
+    (…, ceil(N/32)) uint32.
+    """
+    lead = x_packed.shape[:-1]
+    x2 = x_packed.reshape(-1, x_packed.shape[-1])
+    out = kops.binary_matmul_bn_sign_packed(
+        x2, packed["w_packed"], folded["tau"], folded["flip"],
+        k_true=packed["k_true"], backend=backend)
+    return out.reshape(*lead, -1)
+
+
+def apply_binary_dense_stack_packed(packed_layers: list, foldeds: list,
+                                    x_packed: jax.Array, *,
+                                    backend: str = "auto",
+                                    resident: bool | None = None
+                                    ) -> jax.Array:
+    """The whole hidden dense stack: each layer GEMM + folded-BN
+
+    threshold + re-bitpack, chained without un-packed activations.  On
+    the pallas backend a VMEM-resident stack runs as ONE kernel launch
+    (``resident=None`` auto-decides by VMEM budget; see
+    ``kernels.ops.binary_dense_stack_packed``)."""
+    assert len(packed_layers) == len(foldeds), (len(packed_layers),
+                                                len(foldeds))
+    stages = [{"w_packed": p["w_packed"], "k_true": p["k_true"],
+               "tau": f["tau"], "flip": f["flip"]}
+              for p, f in zip(packed_layers, foldeds)]
+    lead = x_packed.shape[:-1]
+    x2 = x_packed.reshape(-1, x_packed.shape[-1])
+    out = kops.binary_dense_stack_packed(stages, x2, backend=backend,
+                                         resident=resident)
+    return out.reshape(*lead, -1)
+
+
 # ---------------------------------------------------------------------------
 # First-layer bit-plane dense (paper §4.3 / C4)
 # ---------------------------------------------------------------------------

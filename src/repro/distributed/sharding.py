@@ -315,8 +315,14 @@ def logical_activation_spec(mesh: Mesh, ndim: int, *,
 # pool-mask words, so the conv + BN-sign + repack (+ bit-domain pool)
 # epilogue is embarrassingly parallel along C_out (XNOR-Net's
 # decomposition).  The one real seam is the C_out -> packed-word boundary
-# at bn_sign_pack: a shard can only emit its own 32-bit word span if its
-# channel range is word-aligned, i.e. c_out % (32 * |model|) == 0.
+# at the re-bitpack epilogue — standalone bn_sign_pack AND the fused
+# dense GEMM epilogue (ops.binary_matmul_bn_sign_packed) alike: a shard
+# can only emit its own 32-bit word span if its channel range is
+# word-aligned, i.e. c_out % (32 * |model|) == 0.  Sharded hidden dense
+# stages therefore run the per-layer fused kernel on their local rows
+# (models/cnn._dense_hidden_stack); the single-launch resident stack is
+# reserved for unsharded stacks, where it composes with pure data
+# parallelism (every 'data' shard runs the one-launch stack locally).
 # Stages that fail the test degrade to replication over 'model' (the
 # same divisibility-aware fallback philosophy as `_fit`), never to a
 # wrong answer.  Packed activations are batch-sharded over 'data' and
@@ -529,7 +535,8 @@ class ShardedForward:
 
 
 def make_sharded_forward(packed: Any, mesh: Mesh, *,
-                         backend: str = "auto") -> ShardedForward:
+                         backend: str = "auto",
+                         dense_stack: str = "auto") -> ShardedForward:
     """Shard-mapped packed BCNN/BMLP forward on a ('data', 'model') mesh.
 
     Batch shards over 'data'; every word-divisible stage C_out-shards
@@ -540,6 +547,12 @@ def make_sharded_forward(packed: Any, mesh: Mesh, *,
     batch must divide the 'data' axis size.  Bit-identical to the
     single-device forward (distributed/verify_sharded.py sweeps mesh
     shapes on a forced-8-device CPU platform).
+
+    ``dense_stack`` forwards to the model: hidden dense stages that are
+    NOT model-sharded run the single-launch VMEM-resident stack (the
+    residency decision is pure shape math, so every shard agrees);
+    model-sharded stages always run per-layer fused kernels on their
+    local word-aligned rows.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -564,10 +577,11 @@ def make_sharded_forward(packed: Any, mesh: Mesh, *,
         if kind == "bcnn":
             return _cnn.bcnn_forward_packed(
                 p, x, backend=backend, model_axis=model_axis,
-                conv_shards=plan["conv"], dense_shards=plan["dense"])
+                conv_shards=plan["conv"], dense_shards=plan["dense"],
+                dense_stack=dense_stack)
         return _cnn.bmlp_forward_packed(
             p, x, backend=backend, model_axis=model_axis,
-            layer_shards=plan["layer"])
+            layer_shards=plan["layer"], dense_stack=dense_stack)
 
     sm = shard_map(fwd, mesh=mesh, in_specs=(arr_specs, x_spec),
                    out_specs=out_spec, check_rep=False)

@@ -87,9 +87,15 @@ def run_cells(backends=("jnp",), pallas_cell: bool = True) -> list[dict]:
         # Interpret-mode Pallas cells: the kernels themselves run
         # per-shard under shard_map with local C_out/batch shapes —
         # (4, 2) shards the conv stack (incl. the bit-plane stage 0 and
-        # a pooled stage), (2, 4) shards stage 0 four ways.
+        # a pooled stage) AND the hidden dense stage (the fused dense
+        # GEMM epilogue on word-aligned local rows), (2, 4) shards
+        # stage 0 four ways.  The BMLP cell runs the single-launch
+        # VMEM-resident hidden stack per shard (its 96-wide hidden
+        # layer replicates at the pack seam) under a sharded first
+        # layer.
         cells.append(("bcnn", (4, 2), "pallas", *built["bcnn"]))
         cells.append(("bcnn", (2, 4), "pallas", *built["bcnn"]))
+        cells.append(("bmlp", (4, 2), "pallas", *built["bmlp"]))
 
     results = []
     for kind, shape, backend, packed, x, want in cells:

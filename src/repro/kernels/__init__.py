@@ -1,5 +1,7 @@
 # The paper's compute hot-spots as Pallas TPU kernels (see
-# docs/kernels.md): binary_matmul (XNOR-popcount GEMM), bitpack
+# docs/kernels.md): binary_matmul (the dense megakernel suite —
+# vectorized XNOR-popcount GEMM, fused BN-sign-repack epilogue,
+# single-launch hidden stack, GEMV serving grid), bitpack
 # (sign + bit-pack), binary_conv (fused in-kernel-im2col binary conv),
 # fused_epilogue (BN-sign-fold + re-bitpack).  ops.py is the
 # backend-dispatch façade; ref.py holds the pure-jnp oracles.

@@ -1,19 +1,40 @@
-"""Pallas TPU kernel: bit-packed binary GEMM (paper §4.2 + §5.2, C1/C7).
+"""Pallas TPU kernels: the bit-packed dense GEMM megakernel suite
+(paper §4.2, §5.2, §6.2 — C1/C2/C7).
 
-Computes  out[m, n] = K - 2 * popcount(XOR(a[m, :], b[n, :]))  over packed
-uint32 operands — the XNOR-popcount dot-product of Espresso, adapted to TPU:
+The dense analogue of the conv subsystem (``binary_conv.py``), built
+around  out[m, n] = K − 2·popcount(XOR(a[m, :], b[n, :]))  over packed
+uint32 operands:
 
-* 32-bit packing words (TPU VPU lanes are 32-bit; DESIGN.md §2),
-* HBM→VMEM staging via ``BlockSpec`` tiles — the TPU analogue of the
-  paper's shared-memory tiling (C7),
-* grid (M/bm, N/bn, K/bk) with an int32 VMEM accumulator, initialized at
-  k==0 and flushed at k==last (the paper's register-blocked accumulation
-  maps onto Mosaic's vector-register allocation),
-* a GEMV-shaped specialization for small M (paper §6.2: matrix-vector swap
-  at batch 1) — the M tile collapses to the 8-sublane minimum.
+* **Vectorized contraction** — each loop step contracts
+  ``words_per_step`` packed words at once: one (bm, bn, ws)
+  popcount-of-XOR broadcast and a word-axis reduce, instead of the old
+  one-(bm, bn)-tile-per-word scheme (128 sequential steps per lane-wide
+  K block -> 128/ws).  The knob is validated like ``block_oh``/``block_n``
+  (divisors of the 128-lane group; invalid values raise) and the output
+  is invariant to it.
+* **Fused BN-sign-repack epilogue** (:func:`binary_matmul_bn_sign_packed`)
+  — the kernel flush thresholds the int32 accumulator against the folded
+  BN (``fold_bn_sign``) and re-bitpacks along N, so hidden dense layers
+  emit packed uint32 directly and the (M, N) int32 activation never
+  leaves VMEM.  ``block_n`` must land on 32-bit pack seams (the lane
+  check subsumes it, asserted like the conv epilogue).
+* **Single-launch hidden stack** (:func:`binary_dense_stack_packed`) —
+  when every hidden layer's packed weights + folded thresholds fit a
+  VMEM budget (:func:`dense_stack_fits_vmem`), the whole stack runs as
+  ONE ``pallas_call``: grid over M tiles only, every weight BlockSpec
+  pinned to block (0, 0) so the weights stay resident across tiles, and
+  an in-kernel stage loop chains GEMM -> threshold -> repack entirely in
+  VMEM.  The dense analogue of the conv subsystem's single-launch
+  bit-plane kernel.
+* **GEMV / serving specialization** (paper §6.2: matrix-vector swap at
+  batch 1) — for M ≤ 8 the M tile collapses to the sublane minimum and
+  the grid becomes N-major 1-D: the packed activation block is pinned
+  resident in VMEM, weight row blocks stream past it, and the
+  contraction completes per program (no cross-step accumulator).
 
-The contraction loop runs per-word over the packed K dimension so each
-step is one full (bm, bn) VPU op — mismatch counts accumulate in int32.
+HBM→VMEM staging via ``BlockSpec`` tiles is the TPU analogue of the
+paper's shared-memory tiling (C7); 32-bit packing words match the TPU
+VPU lane width (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -25,14 +46,78 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import binarize as B
+from repro.kernels.fused_epilogue import (bn_sign_bits_to_words,
+                                          check_block_lanes,
+                                          check_block_sublanes,
+                                          check_words_per_step,
+                                          pad_bn_params)
 
 # Minimum int32 tile granularity on TPU: (8 sublanes, 128 lanes).
 _SUBLANE = 8
 _LANE = 128
 
+# Packed words contracted per vectorized step (the (bm, bn, ws) popcount
+# broadcast).  8 words = 256 logical K per step keeps the broadcast under
+# ~512 KB at the default (128, 128) tile.
+DEFAULT_WORDS_PER_STEP = 8
 
-def _binary_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_true: int,
-                          n_k_blocks: int, block_kw: int):
+# GEMV path bound: both operands hold their whole packed-K extent in one
+# block, so cap it (4096 words = 128K logical K; the streamed weight
+# block is then block_n * 16 KB).
+_GEMV_MAX_KW = 4096
+
+# Single-launch stack defaults: serving-shaped M tiles (the resident
+# stack is a decode/serve feature — weights dominate VMEM, activations
+# ride in sublane-minimum tiles) and a budget that leaves headroom for
+# Mosaic's double buffering under the ~16 MB/core VMEM.
+STACK_BLOCK_M = _SUBLANE
+STACK_VMEM_BUDGET = 8 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# Shared contraction body
+# ---------------------------------------------------------------------------
+
+def _mismatch_counts(a: jax.Array, b: jax.Array, *,
+                     words_per_step: int) -> jax.Array:
+    """Vectorized XNOR-popcount contraction of two packed blocks.
+
+    ``a``: (bm, kw) uint32, ``b``: (bn, kw) uint32.  Returns the (bm, bn)
+    int32 total mismatch count.  Each loop step slices ``ws`` packed
+    words from both operands and reduces one (bm, bn, ws)
+    popcount-of-XOR broadcast over the word axis — ws lane-tiles of
+    popcount work per step instead of the old single (bm, 1)×(1, bn)
+    word op.  A static tail handles kw not divisible by ws (ragged stack
+    stages); the result is invariant to ``words_per_step``.
+    """
+    bm, kw = a.shape
+    bn = b.shape[0]
+    ws = min(words_per_step, kw)
+    steps, rem = divmod(kw, ws)
+
+    def chunk(a_c, b_c):
+        mism = jax.lax.population_count(a_c[:, None, :] ^ b_c[None, :, :])
+        return mism.sum(axis=-1).astype(jnp.int32)
+
+    def body(i, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, i * ws, ws, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, i * ws, ws, axis=1)
+        return acc + chunk(a_c, b_c)
+
+    acc = jax.lax.fori_loop(0, steps, body,
+                            jnp.zeros((bm, bn), jnp.int32))
+    if rem:
+        acc = acc + chunk(jax.lax.slice_in_dim(a, steps * ws, kw, axis=1),
+                          jax.lax.slice_in_dim(b, steps * ws, kw, axis=1))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_true: int,
+                 n_k_blocks: int, words_per_step: int):
     """One (bm, bn) output tile; grid dim 2 walks the packed-K blocks."""
     kb = pl.program_id(2)
 
@@ -40,28 +125,102 @@ def _binary_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_true: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]          # (bm, block_kw) uint32
-    b = b_ref[...]          # (bn, block_kw) uint32
-
-    def body(i, acc):
-        aw = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)   # (bm, 1)
-        bw = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=1)   # (bn, 1)
-        # (bm, bn) mismatch counts for packed word i — one full VPU tile op.
-        mism = jax.lax.population_count(aw ^ bw.reshape(1, -1))
-        return acc + mism.astype(jnp.int32)
-
-    acc_ref[...] = jax.lax.fori_loop(0, block_kw, body, acc_ref[...])
+    acc_ref[...] += _mismatch_counts(a_ref[...], b_ref[...],
+                                     words_per_step=words_per_step)
 
     @pl.when(kb == n_k_blocks - 1)
     def _flush():
         o_ref[...] = jnp.int32(k_true) - 2 * acc_ref[...]
 
 
+def _gemm_bn_sign_kernel(a_ref, b_ref, tau_ref, flip_ref, o_ref, acc_ref, *,
+                         k_true: int, n_k_blocks: int, words_per_step: int):
+    """Fused variant: the flush thresholds + re-bitpacks along N, so the
+    int32 activation never leaves the accumulator scratch."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _mismatch_counts(a_ref[...], b_ref[...],
+                                     words_per_step=words_per_step)
+
+    @pl.when(kb == n_k_blocks - 1)
+    def _flush():
+        y = jnp.int32(k_true) - 2 * acc_ref[...]
+        o_ref[...] = bn_sign_bits_to_words(y, tau_ref[...], flip_ref[...])
+
+
+def _gemv_kernel(a_ref, b_ref, o_ref, *, k_true: int, words_per_step: int):
+    """N-major serving path: full-K contraction per program, A resident."""
+    o_ref[...] = jnp.int32(k_true) - 2 * _mismatch_counts(
+        a_ref[...], b_ref[...], words_per_step=words_per_step)
+
+
+def _gemv_bn_sign_kernel(a_ref, b_ref, tau_ref, flip_ref, o_ref, *,
+                         k_true: int, words_per_step: int):
+    y = jnp.int32(k_true) - 2 * _mismatch_counts(
+        a_ref[...], b_ref[...], words_per_step=words_per_step)
+    o_ref[...] = bn_sign_bits_to_words(y, tau_ref[...], flip_ref[...])
+
+
+def _dense_stack_kernel(*refs, k_trues: tuple[int, ...],
+                        words_per_step: int):
+    """In-kernel stage loop over the VMEM-resident hidden-layer weights.
+
+    ``refs`` = (x, [w, tau, flip] per stage, out).  Each stage runs the
+    full contraction for this M tile (the stack grid has no N or K
+    blocking — residency is the point), thresholds against its folded
+    BN, and re-bitpacks; the packed words feed the next stage without
+    ever leaving VMEM.  Stage widths are lane-padded by the host wrapper
+    so every repack lands on 32-bit word seams; padded channels carry
+    tau=+inf / flip=+1 and pack as 0-bits, matching the zero-bit-tail
+    convention of the next stage's zero-padded weight words.
+    """
+    x_ref, o_ref = refs[0], refs[-1]
+    h = x_ref[...]
+    for s in range(len(k_trues)):
+        w_ref, tau_ref, flip_ref = refs[1 + 3 * s:4 + 3 * s]
+        mism = _mismatch_counts(h, w_ref[...],
+                                words_per_step=words_per_step)
+        y = jnp.int32(k_trues[s]) - 2 * mism
+        h = bn_sign_bits_to_words(y, tau_ref[...], flip_ref[...])
+    o_ref[...] = h
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrappers
+# ---------------------------------------------------------------------------
+
+def _resolve_blocks(m: int, n: int, kw: int, block_m: int, block_n: int,
+                    block_kw: int, words_per_step: int):
+    """Validate the GEMM knobs (raising, like the conv grid knobs) and
+    trim over-padding.  M ≤ 8 collapses the M tile to the sublane
+    minimum — the GEMV specialization's entry condition."""
+    check_block_sublanes("block_m", block_m)
+    check_block_lanes("block_n", block_n)
+    check_block_lanes("block_kw", block_kw)
+    check_words_per_step("words_per_step", words_per_step)
+    if m <= _SUBLANE:
+        block_m = _SUBLANE
+    block_m = min(block_m, _ceil_mult(m, _SUBLANE))
+    block_n = min(block_n, _ceil_mult(n, _LANE))
+    block_kw = min(block_kw, _ceil_mult(kw, _LANE))
+    return block_m, block_n, block_kw
+
+
+def _use_gemv(m: int, kwp: int) -> bool:
+    return m <= _SUBLANE and kwp <= _GEMV_MAX_KW
+
+
 @functools.partial(jax.jit, static_argnames=("k_true", "block_m", "block_n",
-                                             "block_kw", "interpret"))
+                                             "block_kw", "words_per_step",
+                                             "interpret"))
 def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
                          k_true: int, block_m: int = 128, block_n: int = 128,
                          block_kw: int = 128,
+                         words_per_step: int = DEFAULT_WORDS_PER_STEP,
                          interpret: bool = False) -> jax.Array:
     """Packed binary GEMM via Pallas.
 
@@ -69,21 +228,19 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
     weights — packing happens once at load time, paper C2).  ``k_true`` is
     the *logical* K before packing/padding.  Returns (M, N) int32.
 
-    Tile sizes are clamped/padded to TPU granularity: bm to 8 sublanes, bn
-    to 128 lanes, block_kw to 128 lanes of the packed operand.  Zero-padded
-    words XOR to zero and contribute no mismatches, so padding is exact
-    (see ``core.binarize.pack_bits``).
+    Block knobs must honor TPU granularity (bm: multiples of 8, bn/bkw:
+    multiples of 128; invalid values raise) and are trimmed down to the
+    padded operand.  Zero-padded words XOR to zero and contribute no
+    mismatches, so padding is exact (``core.binarize.pack_bits``).
+    ``words_per_step`` packed words are contracted per loop step; the
+    output is invariant to it.  M ≤ 8 with a VMEM-sized K takes the
+    N-major GEMV grid (paper §6.2).
     """
     m, kw = a_packed.shape
     n, kw_b = b_packed.shape
     assert kw == kw_b, (a_packed.shape, b_packed.shape)
-
-    # GEMV specialization (paper §6.2): collapse the M tile for tiny batch.
-    if m <= _SUBLANE:
-        block_m = _SUBLANE
-    block_m = max(_SUBLANE, min(block_m, _ceil_mult(m, _SUBLANE)))
-    block_n = max(_LANE, min(block_n, _ceil_mult(n, _LANE)))
-    block_kw = max(_LANE, min(block_kw, _ceil_mult(kw, _LANE)))
+    block_m, block_n, block_kw = _resolve_blocks(
+        m, n, kw, block_m, block_n, block_kw, words_per_step)
 
     a_p = B.pad_to_multiple(B.pad_to_multiple(a_packed, block_m, 0),
                             block_kw, 1)
@@ -91,10 +248,27 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
                             block_kw, 1)
     mp, kwp = a_p.shape
     np_, _ = b_p.shape
-    grid = (mp // block_m, np_ // block_n, kwp // block_kw)
 
-    kernel = functools.partial(_binary_matmul_kernel, k_true=k_true,
-                               n_k_blocks=grid[2], block_kw=block_kw)
+    if _use_gemv(m, kwp):
+        kernel = functools.partial(_gemv_kernel, k_true=k_true,
+                                   words_per_step=words_per_step)
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // block_n,),
+            in_specs=[
+                pl.BlockSpec((mp, kwp), lambda j: (0, 0)),
+                pl.BlockSpec((block_n, kwp), lambda j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((mp, block_n), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+            interpret=interpret,
+        )(a_p, b_p)
+        return out[:m, :n]
+
+    grid = (mp // block_m, np_ // block_n, kwp // block_kw)
+    kernel = functools.partial(_gemm_kernel, k_true=k_true,
+                               n_k_blocks=grid[2],
+                               words_per_step=words_per_step)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -108,6 +282,193 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "block_m", "block_n",
+                                             "block_kw", "words_per_step",
+                                             "interpret"))
+def binary_matmul_bn_sign_packed(a_packed: jax.Array, b_packed: jax.Array,
+                                 tau: jax.Array, flip: jax.Array, *,
+                                 k_true: int, block_m: int = 128,
+                                 block_n: int = 128, block_kw: int = 128,
+                                 words_per_step: int = DEFAULT_WORDS_PER_STEP,
+                                 interpret: bool = False) -> jax.Array:
+    """Fused packed GEMM + BN-sign-fold + re-bitpack; packed uint32 output.
+
+    Same contraction (and the same GEMV specialization) as
+    :func:`binary_matmul_packed`, but the kernel flush thresholds the
+    int32 accumulator against the folded BN (``tau``/``flip`` per output
+    channel) and packs the resulting ±1 bits along N — the hidden-layer
+    activation leaves the kernel already packed for the next GEMM.
+    Returns (M, ceil(N/32)) uint32, bit-identical to
+    ``pack_bits(apply_bn_sign_folded(gemm_out))``.  ``block_n`` is a
+    multiple of 128 (validated), which lands every output block on a
+    32-bit pack seam — asserted like the conv epilogue.
+    """
+    m, kw = a_packed.shape
+    n, kw_b = b_packed.shape
+    assert kw == kw_b, (a_packed.shape, b_packed.shape)
+    block_m, block_n, block_kw = _resolve_blocks(
+        m, n, kw, block_m, block_n, block_kw, words_per_step)
+    assert block_n % B.WORD_BITS == 0
+
+    a_p = B.pad_to_multiple(B.pad_to_multiple(a_packed, block_m, 0),
+                            block_kw, 1)
+    b_p = B.pad_to_multiple(B.pad_to_multiple(b_packed, block_n, 0),
+                            block_kw, 1)
+    tau_p, flip_p = pad_bn_params(tau, flip, block_n)
+    mp, kwp = a_p.shape
+    np_, _ = b_p.shape
+    bnw = block_n // B.WORD_BITS
+    cw_out = B.packed_width(n)
+
+    if _use_gemv(m, kwp):
+        kernel = functools.partial(_gemv_bn_sign_kernel, k_true=k_true,
+                                   words_per_step=words_per_step)
+        out = pl.pallas_call(
+            kernel,
+            grid=(np_ // block_n,),
+            in_specs=[
+                pl.BlockSpec((mp, kwp), lambda j: (0, 0)),
+                pl.BlockSpec((block_n, kwp), lambda j: (j, 0)),
+                pl.BlockSpec((1, block_n), lambda j: (0, j)),
+                pl.BlockSpec((1, block_n), lambda j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((mp, bnw), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_ // B.WORD_BITS),
+                                           jnp.uint32),
+            interpret=interpret,
+        )(a_p, b_p, tau_p, flip_p)
+        return out[:m, :cw_out]
+
+    grid = (mp // block_m, np_ // block_n, kwp // block_kw)
+    kernel = functools.partial(_gemm_bn_sign_kernel, k_true=k_true,
+                               n_k_blocks=grid[2],
+                               words_per_step=words_per_step)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_kw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_kw), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, bnw), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_ // B.WORD_BITS), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p, tau_p, flip_p)
+    return out[:m, :cw_out]
+
+
+# ---------------------------------------------------------------------------
+# Single-launch hidden stack
+# ---------------------------------------------------------------------------
+
+def dense_stack_vmem_bytes(weights: list, *,
+                           block_m: int = STACK_BLOCK_M,
+                           words_per_step: int = DEFAULT_WORDS_PER_STEP
+                           ) -> int:
+    """Upper-bound VMEM residency of :func:`binary_dense_stack_packed`.
+
+    Resident terms: every stage's lane-padded weight block + folded
+    tau/flip rows + the activation M tile.  Transient terms (the largest
+    single stage): the (block_m, n_pad, ws) popcount broadcast, the
+    int32 pre-threshold tile, and the repacked words.
+    """
+    prev_words = weights[0].shape[1]
+    total = block_m * prev_words * 4                     # x tile
+    peak = 0
+    for w in weights:
+        n_pad = _ceil_mult(w.shape[0], _LANE)
+        total += n_pad * prev_words * 4                  # resident weights
+        total += 2 * n_pad * 4                           # tau + flip
+        ws = min(words_per_step, prev_words)
+        stage = (block_m * n_pad * (ws + 1) * 4          # broadcast + y
+                 + block_m * (n_pad // B.WORD_BITS) * 4)  # repacked words
+        peak = max(peak, stage)
+        prev_words = n_pad // B.WORD_BITS
+    return total + peak
+
+
+def dense_stack_fits_vmem(weights: list, *, budget: int | None = None,
+                          block_m: int = STACK_BLOCK_M,
+                          words_per_step: int = DEFAULT_WORDS_PER_STEP
+                          ) -> bool:
+    """Residency decision for the single-launch stack (pure shape math —
+    identical on every shard, so sharded callers never diverge)."""
+    budget = STACK_VMEM_BUDGET if budget is None else budget
+    return dense_stack_vmem_bytes(
+        weights, block_m=block_m,
+        words_per_step=words_per_step) <= budget
+
+
+@functools.partial(jax.jit, static_argnames=("k_trues", "block_m",
+                                             "words_per_step", "interpret"))
+def binary_dense_stack_packed(x_packed: jax.Array, weights: list,
+                              taus: list, flips: list, *,
+                              k_trues: tuple[int, ...],
+                              block_m: int = STACK_BLOCK_M,
+                              words_per_step: int = DEFAULT_WORDS_PER_STEP,
+                              interpret: bool = False) -> jax.Array:
+    """The whole hidden dense stack in ONE ``pallas_call``.
+
+    ``x_packed``: (M, Kw₀) packed input activation; stage ``s`` applies
+    weights ``(N_s, Kw_s)`` then the folded BN threshold ``taus[s]`` /
+    ``flips[s]`` and re-bitpacks.  Returns (M, ceil(N_last/32)) uint32 —
+    bit-identical to chaining ``binary_matmul_bn_sign_packed`` per layer
+    (and to GEMM -> ``bn_sign_pack``), property-tested.
+
+    Grid: (M tiles,) only.  Every weight/tau/flip BlockSpec is pinned to
+    block (0, 0), so Pallas holds ONE DMA of the full stack resident in
+    VMEM across all M tiles while the x/out tiles stream — callers gate
+    on :func:`dense_stack_fits_vmem` and fall back to per-layer fused
+    launches when the stack doesn't fit.  Stage widths are lane-padded;
+    a stage's padded channels pack as 0-bits (tau=+inf, flip=+1) and the
+    next stage's weights are zero-word-padded to match, so padding is
+    exact end-to-end.
+    """
+    m, kw0 = x_packed.shape
+    n_stages = len(weights)
+    assert n_stages == len(taus) == len(flips) == len(k_trues) >= 1
+    assert weights[0].shape[1] == kw0, (weights[0].shape, x_packed.shape)
+    check_block_sublanes("block_m", block_m)
+    check_words_per_step("words_per_step", words_per_step)
+    block_m = min(block_m, _ceil_mult(m, _SUBLANE))
+
+    x_p = B.pad_to_multiple(x_packed, block_m, 0)
+    mp = x_p.shape[0]
+    operands = [x_p]
+    in_specs = [pl.BlockSpec((block_m, kw0), lambda i: (i, 0))]
+    prev_words = kw0
+    for s in range(n_stages):
+        w = weights[s]
+        n_s, kw_s = w.shape
+        assert kw_s <= prev_words, (s, w.shape, prev_words)
+        w_p = B.pad_to_multiple(w, prev_words, 1)        # zero word tails
+        n_pad = _ceil_mult(n_s, _LANE)
+        w_p = B.pad_to_multiple(w_p, n_pad, 0)
+        tau_p, flip_p = pad_bn_params(taus[s], flips[s], n_pad)
+        operands += [w_p, tau_p, flip_p]
+        in_specs += [
+            pl.BlockSpec((n_pad, prev_words), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+        ]
+        prev_words = n_pad // B.WORD_BITS
+
+    kernel = functools.partial(_dense_stack_kernel, k_trues=k_trues,
+                               words_per_step=words_per_step)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // block_m,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, prev_words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, prev_words), jnp.uint32),
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :B.packed_width(weights[-1].shape[0])]
 
 
 def _ceil_mult(x: int, m: int) -> int:

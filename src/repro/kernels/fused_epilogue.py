@@ -48,6 +48,20 @@ def check_block_sublanes(name: str, value: int) -> None:
             f"granularity), got {value}")
 
 
+def check_words_per_step(name: str, value: int) -> None:
+    """Contraction-vectorization knob: packed words contracted per step.
+
+    Must be a positive divisor of the 128-lane group so every lane-padded
+    K block splits into whole steps (1, 2, 4, ..., 128).  Like the block
+    knobs, invalid values raise instead of being silently adjusted
+    (tests/test_dense_properties.py).
+    """
+    if value < 1 or _LANE % value != 0:
+        raise ValueError(
+            f"{name} must be a positive divisor of {_LANE} (TPU lane "
+            f"granularity), got {value}")
+
+
 def bn_sign_bits_to_words(y: jax.Array, tau: jax.Array,
                           flip: jax.Array) -> jax.Array:
     """The epilogue contract, shared by every kernel that inlines it.

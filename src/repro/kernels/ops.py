@@ -38,32 +38,119 @@ def _resolve(backend: str) -> str:
     return backend
 
 
-def binary_matmul(a: jax.Array, b: jax.Array, *,
-                  backend: str = "auto") -> jax.Array:
+def _words_per_step(words_per_step: int | None) -> int:
+    return (_bmm.DEFAULT_WORDS_PER_STEP if words_per_step is None
+            else words_per_step)
+
+
+def binary_matmul(a: jax.Array, b: jax.Array, *, backend: str = "auto",
+                  words_per_step: int | None = None) -> jax.Array:
     """End-to-end binary GEMM on real-valued operands.
 
     ``a``: (M, K), ``b``: (N, K).  Sign-binarizes both, packs, and runs the
     XNOR-popcount GEMM.  Returns (M, N) int32.
 
     backend: 'pallas' | 'jnp' | 'ref' | 'auto' (pallas on TPU, jnp else).
+    Packing goes through the :func:`bitpack` dispatcher, so the pallas
+    backend packs with the pallas kernel (it used to fall back to the
+    host-side ``pack_bits`` even when a Pallas GEMM followed).
     """
     backend = _resolve(backend)
     if backend == "ref":
         return _ref.binary_matmul_ref(a, b)
     k = a.shape[-1]
-    a_p = B.pack_bits(a)
-    b_p = B.pack_bits(b)
-    return binary_matmul_packed(a_p, b_p, k_true=k, backend=backend)
+    a_p = bitpack(a, backend=backend)
+    b_p = bitpack(b, backend=backend)
+    return binary_matmul_packed(a_p, b_p, k_true=k, backend=backend,
+                                words_per_step=words_per_step)
 
 
 def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
-                         k_true: int, backend: str = "auto") -> jax.Array:
-    """Binary GEMM on pre-packed operands (weights packed once, paper C2)."""
+                         k_true: int, backend: str = "auto",
+                         words_per_step: int | None = None) -> jax.Array:
+    """Binary GEMM on pre-packed operands (weights packed once, paper C2).
+
+    ``words_per_step`` packed words are contracted per kernel loop step
+    (pallas backend; ``None`` auto-sizes).  The output is invariant to
+    it; invalid values (non-divisors of the 128-lane group) raise like
+    the conv ``block_oh``/``block_n`` knobs do.
+    """
     backend = _resolve(backend)
     if backend == "pallas":
-        return _bmm.binary_matmul_packed(a_packed, b_packed, k_true=k_true,
-                                         interpret=not _on_tpu())
+        return _bmm.binary_matmul_packed(
+            a_packed, b_packed, k_true=k_true,
+            words_per_step=_words_per_step(words_per_step),
+            interpret=not _on_tpu())
     return B.packed_matmul(a_packed, b_packed, k_true)
+
+
+def binary_matmul_bn_sign_packed(a_packed: jax.Array, b_packed: jax.Array,
+                                 tau: jax.Array, flip: jax.Array, *,
+                                 k_true: int, backend: str = "auto",
+                                 words_per_step: int | None = None
+                                 ) -> jax.Array:
+    """Fused packed GEMM + BN-sign-fold + re-bitpack (the dense analogue
+    of ``binary_conv2d_bn_sign_packed``).
+
+    Returns (M, ceil(N/32)) uint32 — the next binary layer's input,
+    without the (M, N) int32 activation ever leaving the kernel.
+    Bit-identical to ``bn_sign_pack(binary_matmul_packed(...))``.
+    """
+    backend = _resolve(backend)
+    if backend == "pallas":
+        return _bmm.binary_matmul_bn_sign_packed(
+            a_packed, b_packed, tau, flip, k_true=k_true,
+            words_per_step=_words_per_step(words_per_step),
+            interpret=not _on_tpu())
+    return _ref.binary_matmul_bn_sign_packed_ref(a_packed, b_packed, tau,
+                                                 flip, k_true)
+
+
+def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
+                              backend: str = "auto",
+                              resident: bool | None = None,
+                              block_m: int | None = None,
+                              words_per_step: int | None = None,
+                              vmem_budget_bytes: int | None = None
+                              ) -> jax.Array:
+    """A chain of hidden dense layers, each GEMM + BN-sign + re-bitpack.
+
+    ``stages``: list of ``{"w_packed", "k_true", "tau", "flip"}``;
+    ``x_packed``: (M, Kw₀) packed activation.  Returns the packed uint32
+    activation after the last stage — bit-identical to chaining
+    :func:`binary_matmul_bn_sign_packed`.
+
+    pallas backend: when the whole stack's weights + folded thresholds
+    fit the VMEM budget (``dense_stack_fits_vmem``), the stack runs as
+    ONE kernel launch with an in-kernel stage loop over the resident
+    weights; otherwise it falls back to one fused launch per layer.
+    ``resident`` overrides the auto decision (True forces the single
+    launch, False forces per-layer).
+    """
+    backend = _resolve(backend)
+    if not stages:                  # empty stack: identity on every backend
+        return x_packed
+    if backend != "pallas":
+        return _ref.binary_dense_stack_packed_ref(stages, x_packed)
+    weights = [s["w_packed"] for s in stages]
+    bm = _bmm.STACK_BLOCK_M if block_m is None else block_m
+    ws = _words_per_step(words_per_step)
+    if resident is None:
+        resident = _bmm.dense_stack_fits_vmem(
+            weights, budget=vmem_budget_bytes, block_m=bm,
+            words_per_step=ws)
+    if resident:
+        return _bmm.binary_dense_stack_packed(
+            x_packed, weights,
+            [s["tau"] for s in stages], [s["flip"] for s in stages],
+            k_trues=tuple(int(s["k_true"]) for s in stages),
+            block_m=bm, words_per_step=ws, interpret=not _on_tpu())
+    h = x_packed
+    for s in stages:
+        h = _bmm.binary_matmul_bn_sign_packed(
+            h, s["w_packed"], s["tau"], s["flip"], k_true=s["k_true"],
+            words_per_step=ws, interpret=not _on_tpu())
+    return h
 
 
 def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:

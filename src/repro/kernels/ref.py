@@ -34,6 +34,29 @@ def bitpack_ref(x: jax.Array) -> jax.Array:
     return B.pack_bits(x)
 
 
+def binary_matmul_bn_sign_packed_ref(a_packed: jax.Array,
+                                     b_packed: jax.Array, tau: jax.Array,
+                                     flip: jax.Array, k: int) -> jax.Array:
+    """Reference fused dense epilogue: packed GEMM, then BN-sign + pack."""
+    return bn_sign_pack_ref(B.packed_matmul(a_packed, b_packed, k), tau,
+                            flip)
+
+
+def binary_dense_stack_packed_ref(stages: list,
+                                  x_packed: jax.Array) -> jax.Array:
+    """Reference hidden dense stack: per-layer fused epilogue, chained.
+
+    Defines the exact semantics of the single-launch stack kernel
+    (``binary_matmul.binary_dense_stack_packed``) AND its per-layer
+    fallback — both must match it bit-for-bit.
+    """
+    h = x_packed
+    for s in stages:
+        h = binary_matmul_bn_sign_packed_ref(h, s["w_packed"], s["tau"],
+                                             s["flip"], s["k_true"])
+    return h
+
+
 def bitplane_dot_ref(x_uint8: jax.Array, w: jax.Array) -> jax.Array:
     """Reference first-layer bit-plane dot == exact integer GEMM."""
     return jnp.dot(x_uint8.astype(jnp.int32),

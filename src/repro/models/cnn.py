@@ -90,14 +90,54 @@ def _gather_packed(hp: jax.Array, axis_name: str) -> jax.Array:
     return jax.lax.all_gather(hp, axis_name, axis=hp.ndim - 1, tiled=True)
 
 
+def _check_dense_stack(dense_stack: str) -> None:
+    if dense_stack not in ("auto", "resident", "per_layer"):
+        raise ValueError(f"unknown dense_stack mode {dense_stack!r}")
+
+
+def _dense_hidden_stack(layers: list, foldeds: list, hp: jax.Array, *,
+                        backend: str, model_axis: str | None,
+                        shards: tuple[int, ...],
+                        dense_stack: str) -> jax.Array:
+    """The hidden dense stack shared by both networks: every layer is a
+
+    fused GEMM + BN-sign + re-bitpack, packed in / packed out.
+
+    Unsharded stacks route through ``apply_binary_dense_stack_packed``:
+    ONE kernel launch when the stack's weights + folded thresholds are
+    VMEM-resident (``dense_stack='auto'``; ``'resident'`` forces it,
+    ``'per_layer'`` forces the fallback), per-layer fused launches
+    otherwise.  C_out-sharded layers always run per-layer — each shard
+    computes its own word span (the ``c_out % (32·|model|)`` pack-seam
+    rule guarantees word alignment) and the packed bits are
+    all-gathered before the next contraction.
+    """
+    _check_dense_stack(dense_stack)
+    if not layers:
+        return hp
+    if all(s == 1 for s in shards) and dense_stack != "per_layer":
+        return L.apply_binary_dense_stack_packed(
+            layers, foldeds, hp, backend=backend,
+            resident=True if dense_stack == "resident" else None)
+    for i, (layer, folded) in enumerate(zip(layers, foldeds)):
+        hp = L.apply_binary_dense_bn_packed(layer, folded, hp,
+                                            backend=backend)
+        if shards[i] > 1:
+            hp = _gather_packed(hp, model_axis)
+    return hp
+
+
 def bmlp_forward_packed(packed: dict, x_uint8: jax.Array, *,
                         backend: str = "auto", model_axis: str | None = None,
-                        layer_shards: tuple[int, ...] | None = None
-                        ) -> jax.Array:
+                        layer_shards: tuple[int, ...] | None = None,
+                        dense_stack: str = "auto") -> jax.Array:
     """Optimized forward: bit-plane first layer (C4), packed GEMMs (C1),
 
     folded BN+sign thresholds between layers (no fp math until the output
-    BN).
+    BN).  Hidden layers run as fused GEMM + BN-sign + re-bitpack kernels
+    — and, when the stack is VMEM-resident, as ONE kernel launch for the
+    whole hidden stack (``dense_stack``: 'auto' | 'resident' |
+    'per_layer').
 
     When called per-shard inside ``shard_map`` (see
     ``distributed.sharding.make_sharded_forward``), ``layer_shards[i]``
@@ -111,15 +151,18 @@ def bmlp_forward_packed(packed: dict, x_uint8: jax.Array, *,
     assert shards[-1] == 1, "output layer must stay replicated"
     z = L.apply_bitplane_dense_packed(packed["layers"][0], x_uint8,
                                       backend=backend)
-    for i in range(n - 1):
-        # Fused threshold + re-bitpack: the ±1 activation never appears.
-        hp = L.apply_bn_sign_folded_packed(packed["folded"][i], z,
-                                           backend=backend)
-        if shards[i] > 1:
-            hp = _gather_packed(hp, model_axis)
-        if i + 1 < n:
-            z = L.apply_binary_dense_prepacked(packed["layers"][i + 1], hp,
-                                               backend=backend)
+    # Layer 0 accumulates over bit planes in int32, so its epilogue runs
+    # standalone; every later hidden layer fuses GEMM + epilogue.
+    hp = L.apply_bn_sign_folded_packed(packed["folded"][0], z,
+                                       backend=backend)
+    if shards[0] > 1:
+        hp = _gather_packed(hp, model_axis)
+    hp = _dense_hidden_stack(
+        packed["layers"][1:n - 1], packed["folded"][1:], hp,
+        backend=backend, model_axis=model_axis, shards=shards[1:n - 1],
+        dense_stack=dense_stack)
+    z = L.apply_binary_dense_prepacked(packed["layers"][n - 1], hp,
+                                       backend=backend)
     return L.apply_batchnorm(packed["bn_out"], z)
 
 
@@ -256,15 +299,18 @@ def _bitplane_conv_packed(pc: dict, x_uint8: jax.Array, nbits: int, *,
 def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
                         backend: str = "auto", model_axis: str | None = None,
                         conv_shards: tuple[int, ...] | None = None,
-                        dense_shards: tuple[int, ...] | None = None
-                        ) -> jax.Array:
+                        dense_shards: tuple[int, ...] | None = None,
+                        dense_stack: str = "auto") -> jax.Array:
     """Optimized forward: after the bit-plane first stage, every
 
     inter-layer activation stays bit-packed in HBM end-to-end — fused
     conv + BN-sign + re-bitpack kernels between conv stages, bit-domain
-    max-pooling (OR/AND under the flip mask), and pre-packed GEMMs
-    through the dense stack.  Thresholding before pooling is exact
-    because the folded BN-sign compare is monotone per channel.
+    max-pooling (OR/AND under the flip mask), and fused
+    GEMM + BN-sign + re-bitpack kernels through the hidden dense tail
+    (one launch for the whole tail when it is VMEM-resident;
+    ``dense_stack``: 'auto' | 'resident' | 'per_layer').  Thresholding
+    before pooling is exact because the folded BN-sign compare is
+    monotone per channel.
 
     Sharded execution (per-shard body under ``shard_map``, built by
     ``distributed.sharding.make_sharded_forward``): ``conv_shards[i]`` /
@@ -304,13 +350,14 @@ def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
         if conv_shards[i] > 1:
             hp = _gather_packed(hp, model_axis)
     h = hp.reshape(hp.shape[0], -1)         # packed (B, fh*fw*Cw) words
+    # Classifier tail: hidden dense layers are fused GEMM + BN-sign +
+    # re-bitpack (single-launch when VMEM-resident), the output layer
+    # stays int32 for the fp batch-norm.
     n = len(packed["denses"])
-    for i in range(n):
-        z = L.apply_binary_dense_prepacked(packed["denses"][i], h,
-                                           backend=backend)
-        if i < n - 1:
-            h = L.apply_bn_sign_folded_packed(packed["folded_dense"][i], z,
-                                              backend=backend)
-            if dense_shards[i] > 1:
-                h = _gather_packed(h, model_axis)
+    h = _dense_hidden_stack(
+        packed["denses"][:n - 1], packed["folded_dense"], h,
+        backend=backend, model_axis=model_axis,
+        shards=dense_shards[:n - 1], dense_stack=dense_stack)
+    z = L.apply_binary_dense_prepacked(packed["denses"][n - 1], h,
+                                       backend=backend)
     return L.apply_batchnorm(packed["bn_out"], z)

@@ -16,6 +16,8 @@ from _hypothesis_compat import st
 ConvCase = namedtuple(
     "ConvCase", "batch h w c_in c_out k stride padding")
 
+DenseCase = namedtuple("DenseCase", "m k n")
+
 # Channel counts: sub-word (1, 3, 7, 20, 31), exact word (32, 64), and
 # multi-word ragged (33, 40) — the zero-bit-tail paths.
 AWKWARD_C_IN = (1, 3, 7, 20, 31, 32, 33, 40, 64)
@@ -73,6 +75,34 @@ def m_tilings() -> "st.SearchStrategy":
     """block_oh choices: None (auto = untiled for small images), single
     output row, and small bands that leave a ragged last tile."""
     return st.sampled_from((None, 1, 2, 3))
+
+
+def dense_cases() -> "st.SearchStrategy":
+    """(M, K, N) GEMM geometries for the dense megakernel suite.
+
+    K and N sample sub-word, exact-word, and multi-word-ragged values
+    (the pack-seam tails of both the contraction and the fused repack
+    epilogue); M spans the GEMV serving shapes (1, 2, 8 — the N-major
+    grid), the 8/9 sublane boundary, and multi-tile sizes.
+    """
+    return st.tuples(
+        st.sampled_from((1, 2, 8, 9, 13, 40)),
+        st.sampled_from((31, 32, 33, 64, 100, 131, 260)),
+        st.sampled_from((10, 31, 32, 33, 48, 100, 130)),
+    ).map(lambda t: DenseCase(*t))
+
+
+def words_per_steps() -> "st.SearchStrategy":
+    """Contraction-vectorization knob: None (kernel default) plus the
+    divisor-of-128 extremes — the output must be invariant to all."""
+    return st.sampled_from((None, 1, 2, 8, 32, 128))
+
+
+def dense_stack_widths() -> "st.SearchStrategy":
+    """Hidden-stack layer widths (d_out per stage), pack-seam-ragged
+    included — 33/40 leave zero-bit tails the in-kernel repack must
+    thread through to the next stage's zero-padded weight words."""
+    return st.sampled_from(((64,), (48, 64), (33, 96, 40), (100, 64, 32)))
 
 
 def seeds() -> "st.SearchStrategy":

@@ -100,10 +100,17 @@ def test_every_public_op_rejects_unknown_backend():
     bplan = BC.make_bitplane_conv_plan(wu, input_hw=(6, 6))
     x_p = B.pack_bits(x)
     folded = {"tau": jnp.zeros((16,)), "flip": jnp.ones((16,))}
+    dense_stages = [{"w_packed": B.pack_bits(b), "k_true": 64,
+                     "tau": jnp.zeros((4,)), "flip": jnp.ones((4,))}]
     calls = [
         lambda be: ops.binary_matmul(a, b, backend=be),
         lambda be: ops.binary_matmul_packed(B.pack_bits(a), B.pack_bits(b),
                                             k_true=64, backend=be),
+        lambda be: ops.binary_matmul_bn_sign_packed(
+            B.pack_bits(a), B.pack_bits(b), jnp.zeros((4,)),
+            jnp.ones((4,)), k_true=64, backend=be),
+        lambda be: ops.binary_dense_stack_packed(dense_stages,
+                                                 B.pack_bits(a), backend=be),
         lambda be: ops.bitpack(a, backend=be),
         lambda be: ops.binary_conv2d_packed(plan, x_p, backend=be),
         lambda be: ops.binary_conv2d_bn_sign_packed(plan, folded, x_p,
@@ -117,6 +124,23 @@ def test_every_public_op_rejects_unknown_backend():
     for call in calls:
         with pytest.raises(ValueError, match="unknown backend"):
             call("pallsa")
+
+
+def test_binary_matmul_pallas_packs_in_kernel():
+    """Regression: ops.binary_matmul used to pack both operands with the
+    host-side pack_bits even on backend='pallas'.  Routed through the
+    bitpack dispatcher, the traced fn now launches 3 kernels (two packs
+    + the GEMM) instead of one."""
+    from repro.utils.jaxpr import count_pallas_calls
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (16, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (32, 64))
+    n = count_pallas_calls(
+        lambda u, v: ops.binary_matmul(u, v, backend="pallas"), a, b)
+    assert n == 3, f"expected pack+pack+GEMM kernel launches, traced {n}"
+    n_jnp = count_pallas_calls(
+        lambda u, v: ops.binary_matmul(u, v, backend="jnp"), a, b)
+    assert n_jnp == 0, n_jnp
 
 
 def test_binary_conv2d_wrapper_forwards_block_knobs():
