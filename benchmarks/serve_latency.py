@@ -1,0 +1,163 @@
+"""Serving-subsystem benchmark: request latency + throughput-vs-batch.
+
+Drives ``train.serve.PackedInferenceServer`` (the Espresso
+prediction-phase engine) on CPU:
+
+* an arrival trace against the continuous-batching queue → per-request
+  p50/p99 latency under the deadline-flush policy,
+* forced flushes at batch 1..max → throughput-vs-batch rows, each
+  annotated with the GEMV/GEMM route the ``ops.dispatch_batch`` seam
+  picked,
+* pack-once / zero-steady-state-allocation evidence: the weight cache
+  packs each config exactly once regardless of request count, and the
+  scratch pool stops allocating once its buckets are warm.
+
+    PYTHONPATH=src python -m benchmarks.serve_latency          # full
+    REPRO_BENCH_SMOKE=1 ... python -m benchmarks.serve_latency # CI-sized
+
+Writes ``experiments/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import numpy as np
+
+from repro.models import cnn
+from repro.train import serve as SV
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _build(model: str):
+    return cnn.demo_model(model, smoke=SMOKE)
+
+
+def trace_rows(model: str, *, requests: int, deadline_s: float = 0.005,
+               max_batch: int = 8) -> list[tuple]:
+    """Replay an arrival trace; report per-request latency percentiles."""
+    params, spec, kind = _build(model)
+    srv = SV.PackedInferenceServer(max_batch=max_batch,
+                                   default_deadline=deadline_s)
+    srv.register(model, params, spec, kind=kind, backend="jnp")
+    eng = srv.engine()
+    rng = np.random.default_rng(0)
+    xs = rng.integers(0, 256, (requests, *eng.example_shape),
+                      dtype=np.uint8)
+    # Warm EVERY bucket the trace can flush through, so no request's
+    # recorded latency includes a jit compile (a ragged tail flush would
+    # otherwise hit a cold bucket).
+    for b in eng.buckets:
+        if b <= max_batch:
+            srv.serve(list(xs[:b]))
+    srv.served.clear()
+    srv.flushes.clear()
+
+    t0 = time.monotonic()
+    for i in range(requests):
+        srv.submit(xs[i])
+        srv.step()
+    while srv.pending():
+        srv.step()
+    wall = time.monotonic() - t0
+    lats = sorted(r.latency for r in srv.served)
+    assert len(lats) == requests
+    batches = [f.batch for f in srv.flushes]
+    note = (f"{requests} reqs, deadline={deadline_s * 1e3:.0f}ms, "
+            f"max_batch={max_batch}, flush batches={batches}, jnp backend")
+    return [
+        (f"serve/{model}_p50_latency_us",
+         statistics.median(lats) * 1e6, note),
+        (f"serve/{model}_p99_latency_us",
+         SV.latency_percentile(lats, 0.99) * 1e6, note),
+        (f"serve/{model}_trace_throughput_rps", requests / wall, note),
+    ]
+
+
+def throughput_rows(model: str, *, reps: int) -> list[tuple]:
+    """Forced flushes at fixed batch sizes: throughput vs batch, each
+    row carrying the route the dispatch seam chose for that bucket."""
+    params, spec, kind = _build(model)
+    srv = SV.PackedInferenceServer(max_batch=32)
+    srv.register(model, params, spec, kind=kind, backend="jnp")
+    eng = srv.engine()
+    rng = np.random.default_rng(1)
+    rows = []
+    for b in (1, 2, 4, 8, 16, 32):
+        xs = list(rng.integers(0, 256, (b, *eng.example_shape),
+                               dtype=np.uint8))
+        srv.serve(xs)                          # warm this bucket
+        t0 = time.monotonic()
+        for _ in range(reps):
+            srv.serve(xs)
+        dt = time.monotonic() - t0
+        rows.append((f"serve/{model}_throughput_b{b}_rps",
+                     b * reps / dt,
+                     f"route={srv.route_for(b)} bucket={b} "
+                     f"({reps} flushes, jnp backend)"))
+    # pack-once + steady-state evidence for the whole sweep
+    rows.append((f"serve/{model}_weight_cache_packs",
+                 float(srv.cache.misses),
+                 f"configs packed once across "
+                 f"{sum(f.batch for f in srv.flushes)} served requests"))
+    allocs = srv.pool.allocations
+    for b in (1, 8, 32):
+        srv.serve(list(rng.integers(0, 256, (b, *eng.example_shape),
+                                    dtype=np.uint8)))
+    rows.append((f"serve/{model}_steady_state_new_allocs",
+                 float(srv.pool.allocations - allocs),
+                 "staging buffers allocated AFTER all buckets warm "
+                 "(scratch pool reuse)"))
+    return rows
+
+
+def gemv_row() -> list[tuple]:
+    """Batch-1 serving through the interpret-mode Pallas engine: the
+    flush takes the N-major GEMV grid end-to-end (launch-shape contract
+    tested in tests/test_serve_batching.py)."""
+    params, spec, kind = _build("bmlp")
+    srv = SV.PackedInferenceServer(max_batch=8)
+    srv.register("bmlp-pallas", params, spec, kind=kind, backend="pallas")
+    eng = srv.engine()
+    x = [np.zeros(eng.example_shape, np.uint8)]
+    srv.serve(x)                               # compile bucket 1
+    t0 = time.monotonic()
+    srv.serve(x)
+    dt = time.monotonic() - t0
+    assert srv.flushes[-1].route == "gemv"
+    return [("serve/bmlp_gemv_b1_pallas_us", dt * 1e6,
+             "batch-1 flush via the N-major GEMV grid "
+             "(interpret mode on CPU)")]
+
+
+def rows() -> list[tuple]:
+    out = []
+    reqs = 16 if SMOKE else 48
+    reps = 2 if SMOKE else 5
+    for model in ("bmlp", "bcnn"):
+        out += trace_rows(model, requests=reqs)
+        out += throughput_rows(model, reps=reps)
+    out += gemv_row()
+    return out
+
+
+def write_bench_json(rs: list[tuple],
+                     path="experiments/BENCH_serve.json") -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = [{"name": n, "value": v, "note": note} for n, v, note in rs]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def main() -> None:
+    rs = rows()
+    for name, v, note in rs:
+        print(f"{name},{v:.1f},{note}")
+    write_bench_json(rs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,17 @@
-"""End-to-end driver (the paper's kind = inference): serve a small LM
+"""Serve a small LM with continuous batching and 1-bit packed weights.
 
-with batched requests and 1-bit packed weights.
+The LM-side serving demo (the packed BCNN/BMLP serving engine is
+``python -m repro.launch.serve``; see docs/serving.md):
 
 * loads a reduced starcoder2 config with QuantMode.BINARY_WEIGHT,
 * packs every projection ONCE (paper C2, 16-32x weight memory cut),
-* prefills a batch of prompts and decodes with continuous batching,
+* drives ``train.serve.BatchedServer`` — a ragged mix of requests
+  shares one ring of decode slots; finished requests free their slot
+  for the next queued prompt, and requests the shared cache cannot
+  finish come back flagged ``truncated`` (never dropped),
 * reports tokens/s and the packed-vs-fp parameter bytes.
 
-    PYTHONPATH=src python examples/serve_binary_lm.py [--new 24]
+    PYTHONPATH=src python examples/serve_binary_lm.py [--requests 6]
 """
 import argparse
 import time
@@ -18,14 +22,17 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import linear as LN
 from repro.models import model as M
+from repro.train import serve as SV
 from repro.utils.tree import tree_bytes
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=48)
     args = ap.parse_args()
 
     cfg = get_config("starcoder2-3b", quant="binary_weight", reduced=True)
@@ -36,34 +43,29 @@ def main():
     print(f"packed stack: {fp_bytes} -> {tree_bytes(params['stack'])} bytes"
           f" ({fp_bytes / tree_bytes(params['stack']):.1f}x)")
 
-    max_len = args.prompt_len + args.new
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.monotonic()
-    logits, cache = jax.jit(
-        lambda p, b: M.prefill(p, cfg, b, max_len))(params,
-                                                    {"tokens": prompts})
-    jax.block_until_ready(logits)
-    print(f"prefill {args.batch}x{args.prompt_len}: "
-          f"{time.monotonic() - t0:.2f}s")
+    server = SV.BatchedServer(cfg, params, batch_slots=args.slots,
+                              max_len=args.max_len)
+    # Ragged request mix: prompts of different lengths, different budgets
+    # — continuous batching packs them into the slot ring as slots free.
+    reqs = [SV.Request(
+        rid=i,
+        prompt=jax.random.randint(jax.random.fold_in(key, i),
+                                  (args.prompt_len + i % 3,), 0,
+                                  cfg.vocab_size).astype(jnp.int32),
+        max_new=args.max_new + i % 2)
+        for i in range(args.requests)]
 
-    decode = jax.jit(lambda p, c, t, i: M.decode_step(p, cfg, t, c, i))
-    tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
-    toks = [tok]
     t0 = time.monotonic()
-    for t in range(args.new - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(args.prompt_len + t))
-        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
+    done = server.submit_and_run(reqs)
     dt = time.monotonic() - t0
-    total = (args.new - 1) * args.batch
-    print(f"decoded {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s batched)")
-    out = jnp.concatenate(toks, axis=1)
-    for b in range(args.batch):
-        print(f"  seq{b}: {out[b, :12].tolist()} ...")
+    total = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests ({total} tokens) in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s, {args.slots} slots)")
+    for r in sorted(done, key=lambda r: r.rid):
+        mark = " [truncated]" if r.truncated else ""
+        print(f"  req{r.rid}: prompt={len(r.prompt)} -> "
+              f"{r.out[:8]}{'...' if len(r.out) > 8 else ''}{mark}")
+    assert {r.rid for r in done} == {r.rid for r in reqs}, "request lost"
 
 
 if __name__ == "__main__":

@@ -416,12 +416,8 @@ def _bmlp_spec_rule(shard_plan: dict):
 
 
 def _packed_kind(packed: Any) -> str:
-    if "convs" in packed:
-        return "bcnn"
-    if "layers" in packed:
-        return "bmlp"
-    raise ValueError("not a pack_bcnn/pack_bmlp tree: "
-                     f"keys {sorted(packed)}")
+    from repro.models.cnn import packed_kind
+    return packed_kind(packed)
 
 
 def _packed_rule(packed: Any, mesh: Mesh):
@@ -518,14 +514,29 @@ class ShardedForward:
     """Callable wrapper around the jitted shard_map'd packed forward.
 
     Holds the device_put params so calls are ``fwd(x)``; exposes
-    ``.lower(x)`` for HLO inspection and ``.shard_plan`` for tests.
+    ``.lower(x)`` for HLO inspection, ``.shard_plan`` for tests, and
+    the serving-facing seams ``.kind`` / ``.batch_multiple`` — the
+    request queue (``train.serve.PackedInferenceServer``) sizes its
+    flush buckets to multiples of ``batch_multiple`` so every flush
+    satisfies the shard_map batch divisibility rule.
     """
 
-    def __init__(self, jitted, arrays, shard_plan: dict, mesh: Mesh):
+    def __init__(self, jitted, arrays, shard_plan: dict, mesh: Mesh,
+                 kind: str):
         self._jitted = jitted
         self._arrays = arrays
         self.shard_plan = shard_plan
         self.mesh = mesh
+        self.kind = kind
+
+    @property
+    def batch_multiple(self) -> int:
+        """Every submitted batch must be a multiple of this (the product
+        of the mesh's data-parallel axis sizes)."""
+        mult = 1
+        for ax in DATA_AXES:
+            mult *= max(1, _axis_size(self.mesh, ax))
+        return mult
 
     def __call__(self, x):
         return self._jitted(self._arrays, x)
@@ -585,4 +596,4 @@ def make_sharded_forward(packed: Any, mesh: Mesh, *,
 
     sm = shard_map(fwd, mesh=mesh, in_specs=(arr_specs, x_spec),
                    out_specs=out_spec, check_rep=False)
-    return ShardedForward(jax.jit(sm), arrays, plan, mesh)
+    return ShardedForward(jax.jit(sm), arrays, plan, mesh, kind)

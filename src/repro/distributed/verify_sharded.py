@@ -129,7 +129,60 @@ def run_cells(backends=("jnp",), pallas_cell: bool = True) -> list[dict]:
             # sum (all-reduce) would mean the contraction crossed chips.
             rec["ok"] &= set(kinds) <= {"all-gather"}
         results.append(rec)
+    results.append(serve_cell(built))
     return results
+
+
+def serve_cell(built: dict) -> dict:
+    """Serving-over-mesh cell: a ``PackedInferenceServer`` with the
+    (4, 2) mesh behind its queue (``train/serve.py``).
+
+    Ragged submits + a deadline flush + a second full-window flush must
+    return rows bit-identical to the single-device forward, the flush
+    buckets must honor the mesh's ``batch_multiple`` (= 4 here), and
+    the engine's compiled HLO obeys the same all-gather-only rule as
+    the bare sharded forward.
+    """
+    from repro.train import serve as SV
+
+    packed, x, want = built["bcnn"]
+    mesh = make_mesh((4, 2), ("data", "model"))
+    clock = SV.SimClock()
+    srv = SV.PackedInferenceServer(max_batch=BATCH,
+                                   default_deadline=0.005, clock=clock)
+    srv.register("bcnn-serve", packed=packed, backend="jnp", mesh=mesh)
+    eng = srv.engine()
+    assert all(b % eng.batch_multiple == 0 for b in eng.buckets), eng.buckets
+    # Ragged arrivals: 5 requests ride the deadline flush (padded up to
+    # the 8 bucket), the remaining 3 arrive later and flush on their own
+    # deadline (bucket 4) — no head-of-line blocking either way.
+    rids = [srv.submit(np.asarray(x[i])) for i in range(5)]
+    assert srv.step() == []                 # deadline still in the future
+    clock.advance(1.0)
+    done = srv.step()
+    rids += [srv.submit(np.asarray(x[i])) for i in range(5, BATCH)]
+    clock.advance(1.0)
+    done += srv.step()
+    by = {r.rid: r.result for r in done}
+    got = np.stack([by[rid] for rid in rids])
+    bitexact = bool((got == np.asarray(want)).all())
+    t0 = time.monotonic()
+    srv.serve([np.asarray(x[i]) for i in range(BATCH)])
+    t_steady = time.monotonic() - t0
+    hlo = eng.fwd.lower(np.zeros((eng.buckets[-1], *eng.example_shape),
+                                 np.uint8)).compile().as_text()
+    kinds = collective_kinds(hlo)
+    return {
+        "kind": "bcnn", "mesh": [4, 2], "backend": "serve",
+        "bitexact": bitexact,
+        "shard_plan": {k: list(v) for k, v in eng.fwd.shard_plan.items()},
+        "collective_bytes": collective_bytes(hlo).get("total", 0.0),
+        "collective_kinds": kinds,
+        "fwd_first_us": t_steady * 1e6, "fwd_us": t_steady * 1e6,
+        "ok": (bitexact and set(kinds) <= {"all-gather"}
+               and [f.bucket for f in srv.flushes[:2]] == [8, 4]
+               and [f.route for f in srv.flushes[:2]] == ["gemv", "gemv"]),
+    }
 
 
 def main() -> None:

@@ -210,8 +210,22 @@ def _resolve_blocks(m: int, n: int, kw: int, block_m: int, block_n: int,
     return block_m, block_n, block_kw
 
 
-def _use_gemv(m: int, kwp: int) -> bool:
-    return m <= _SUBLANE and kwp <= _GEMV_MAX_KW
+def dispatch_batch(m: int, kw_words: int) -> str:
+    """The GEMV-vs-GEMM routing rule — the one seam every dense caller
+    (the GEMM wrappers here, ``ops.dispatch_batch``, the serving layer)
+    shares, so the batching queue and the kernels can never disagree on
+    which grid a flush lowers to.
+
+    ``m`` is the batch (GEMM M) and ``kw_words`` the packed-K width in
+    uint32 words.  Returns ``'gemv'`` when the M tile collapses to the
+    8-sublane minimum AND the lane-padded packed K fits the resident
+    activation block (``kw_words`` ≤ 4096 words = 128K logical K) —
+    the N-major serving grid; ``'gemm'`` otherwise — the (M, N, K)
+    blocked grid.  Idempotent under lane padding, so callers may pass
+    either the logical or the padded word count.
+    """
+    kwp = _ceil_mult(kw_words, _LANE)
+    return "gemv" if (m <= _SUBLANE and kwp <= _GEMV_MAX_KW) else "gemm"
 
 
 @functools.partial(jax.jit, static_argnames=("k_true", "block_m", "block_n",
@@ -249,7 +263,7 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
     mp, kwp = a_p.shape
     np_, _ = b_p.shape
 
-    if _use_gemv(m, kwp):
+    if dispatch_batch(m, kwp) == "gemv":
         kernel = functools.partial(_gemv_kernel, k_true=k_true,
                                    words_per_step=words_per_step)
         out = pl.pallas_call(
@@ -322,7 +336,7 @@ def binary_matmul_bn_sign_packed(a_packed: jax.Array, b_packed: jax.Array,
     bnw = block_n // B.WORD_BITS
     cw_out = B.packed_width(n)
 
-    if _use_gemv(m, kwp):
+    if dispatch_batch(m, kwp) == "gemv":
         kernel = functools.partial(_gemv_bn_sign_kernel, k_true=k_true,
                                    words_per_step=words_per_step)
         out = pl.pallas_call(

@@ -4,6 +4,18 @@ On a real TPU the kernels run compiled; on CPU (this container, CI) they
 run in ``interpret=True`` mode, which executes the kernel body in Python
 with identical semantics — the correctness contract is enforced against
 ``ref.py`` either way.
+
+Shared argument semantics (every dispatcher in this module):
+
+* ``backend``: ``'pallas'`` (the kernel subsystem), ``'jnp'`` (pure-jnp
+  path), ``'ref'`` (the slow oracle), or ``'auto'`` (pallas on TPU, jnp
+  elsewhere).  Any other string raises ``ValueError`` — backend typos
+  never silently fall through to a different implementation
+  (see :func:`_resolve`).
+* Grid/blocking knobs (``block_oh``, ``block_n``, ``block_m``,
+  ``block_kw``, ``words_per_step``) only affect the pallas backend, are
+  *validated* rather than clamped, and never change the output
+  (property-tested).  ``None`` always means "auto-size".
 """
 from __future__ import annotations
 
@@ -43,6 +55,38 @@ def _words_per_step(words_per_step: int | None) -> int:
             else words_per_step)
 
 
+def dispatch_batch(m: int, kw_words: int) -> str:
+    """The GEMV-vs-GEMM batch-dispatch seam (paper §6.2).
+
+    Given a flush of ``m`` rows contracting ``kw_words`` packed uint32
+    words of K, returns which dense grid the Pallas backend lowers to:
+
+    * ``'gemv'`` — ``m`` ≤ 8 (the TPU sublane minimum) and the
+      lane-padded K extent fits the resident activation block
+      (≤ 4096 words = 128K logical K).  N-major 1-D grid: the packed
+      activation is pinned in VMEM, weight row blocks stream past it,
+      no cross-step accumulator.  The single-query / small-batch
+      serving path.
+    * ``'gemm'`` — everything else.  The (M tiles, N tiles, K blocks)
+      blocked grid with a VMEM accumulator.
+
+    This is the ONE routing rule: :func:`binary_matmul_packed`,
+    :func:`binary_matmul_bn_sign_packed`, and the serving layer
+    (``train.serve.PackedInferenceServer``) all consult it, so a
+    batching policy can never disagree with the kernels about which
+    launch shape a flush takes (asserted on traced grids in
+    ``tests/test_serve_batching.py``).
+
+    Raises ``ValueError`` if ``m`` or ``kw_words`` is not a positive
+    integer.
+    """
+    if m < 1 or kw_words < 1:
+        raise ValueError(
+            f"dispatch_batch needs positive (m, kw_words), got "
+            f"({m}, {kw_words})")
+    return _bmm.dispatch_batch(m, kw_words)
+
+
 def binary_matmul(a: jax.Array, b: jax.Array, *, backend: str = "auto",
                   words_per_step: int | None = None) -> jax.Array:
     """End-to-end binary GEMM on real-valued operands.
@@ -50,10 +94,13 @@ def binary_matmul(a: jax.Array, b: jax.Array, *, backend: str = "auto",
     ``a``: (M, K), ``b``: (N, K).  Sign-binarizes both, packs, and runs the
     XNOR-popcount GEMM.  Returns (M, N) int32.
 
-    backend: 'pallas' | 'jnp' | 'ref' | 'auto' (pallas on TPU, jnp else).
-    Packing goes through the :func:`bitpack` dispatcher, so the pallas
-    backend packs with the pallas kernel (it used to fall back to the
-    host-side ``pack_bits`` even when a Pallas GEMM followed).
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' (pallas on TPU, jnp else);
+    unknown strings raise ``ValueError``.  Packing goes through the
+    :func:`bitpack` dispatcher, so the pallas backend packs with the
+    pallas kernel (it used to fall back to the host-side ``pack_bits``
+    even when a Pallas GEMM followed).  ``words_per_step`` forwards to
+    :func:`binary_matmul_packed` (pallas only; must be a positive
+    divisor of 128 — anything else raises ``ValueError``).
     """
     backend = _resolve(backend)
     if backend == "ref":
@@ -70,10 +117,17 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
                          words_per_step: int | None = None) -> jax.Array:
     """Binary GEMM on pre-packed operands (weights packed once, paper C2).
 
-    ``words_per_step`` packed words are contracted per kernel loop step
-    (pallas backend; ``None`` auto-sizes).  The output is invariant to
-    it; invalid values (non-divisors of the 128-lane group) raise like
-    the conv ``block_oh``/``block_n`` knobs do.
+    ``a_packed``: (M, Kw) uint32, ``b_packed``: (N, Kw) uint32; ``k_true``
+    is the logical K before packing.  Returns (M, N) int32.
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto'; unknown strings raise
+    ``ValueError``.  On the pallas backend ``words_per_step`` packed
+    words are contracted per kernel loop step (``None`` auto-sizes to
+    8); the output is invariant to it, and invalid values — anything
+    that is not a positive divisor of the 128-lane group — raise
+    ``ValueError`` like the conv ``block_oh``/``block_n`` knobs do.
+    M ≤ 8 with a VMEM-sized K lowers to the N-major GEMV grid
+    (:func:`dispatch_batch`).
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -92,9 +146,17 @@ def binary_matmul_bn_sign_packed(a_packed: jax.Array, b_packed: jax.Array,
     """Fused packed GEMM + BN-sign-fold + re-bitpack (the dense analogue
     of ``binary_conv2d_bn_sign_packed``).
 
-    Returns (M, ceil(N/32)) uint32 — the next binary layer's input,
-    without the (M, N) int32 activation ever leaving the kernel.
-    Bit-identical to ``bn_sign_pack(binary_matmul_packed(...))``.
+    ``tau``/``flip``: the per-output-channel folded BN threshold from
+    ``core.binary_layers.fold_bn_sign``.  Returns (M, ceil(N/32)) uint32
+    — the next binary layer's input, without the (M, N) int32 activation
+    ever leaving the kernel.  Bit-identical to
+    ``bn_sign_pack(binary_matmul_packed(...))``.
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' ('jnp' and 'ref' both run
+    the pure oracle); unknown strings raise ``ValueError``.
+    ``words_per_step`` as in :func:`binary_matmul_packed` (non-divisors
+    of 128 raise ``ValueError``).  M ≤ 8 takes the fused GEMV grid
+    (:func:`dispatch_batch`).
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -118,14 +180,21 @@ def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
     ``stages``: list of ``{"w_packed", "k_true", "tau", "flip"}``;
     ``x_packed``: (M, Kw₀) packed activation.  Returns the packed uint32
     activation after the last stage — bit-identical to chaining
-    :func:`binary_matmul_bn_sign_packed`.
+    :func:`binary_matmul_bn_sign_packed`.  An empty ``stages`` list is
+    the identity on every backend.
 
-    pallas backend: when the whole stack's weights + folded thresholds
-    fit the VMEM budget (``dense_stack_fits_vmem``), the stack runs as
-    ONE kernel launch with an in-kernel stage loop over the resident
-    weights; otherwise it falls back to one fused launch per layer.
-    ``resident`` overrides the auto decision (True forces the single
-    launch, False forces per-layer).
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto'; unknown strings raise
+    ``ValueError``.  pallas backend: when the whole stack's weights +
+    folded thresholds fit the VMEM budget
+    (``binary_matmul.dense_stack_fits_vmem``; override the default
+    8 MiB with ``vmem_budget_bytes``), the stack runs as ONE kernel
+    launch with an in-kernel stage loop over the resident weights;
+    otherwise it falls back to one fused launch per layer.  ``resident``
+    overrides the auto decision (True forces the single launch, False
+    forces per-layer).  ``block_m`` tiles the M axis (must be a positive
+    multiple of 8 — the TPU sublane granularity — else ``ValueError``);
+    ``words_per_step`` as in :func:`binary_matmul_packed` (non-divisors
+    of 128 raise ``ValueError``).
     """
     backend = _resolve(backend)
     if not stages:                  # empty stack: identity on every backend
@@ -154,7 +223,16 @@ def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
 
 
 def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
-    """Sign-binarize + pack along the last axis -> uint32 words."""
+    """Sign-binarize + pack along the last axis -> uint32 words.
+
+    ``x``: (..., K) real-valued; values ≥ 0 encode to bit 1, < 0 to
+    bit 0, LSB-first, 32 per word.  Returns (..., ceil(K/32)) uint32
+    with zero-bit tails (exact under the XOR-popcount identity, see
+    ``docs/kernels.md``).
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' ('jnp'/'ref' both run
+    ``binarize.pack_bits``); unknown strings raise ``ValueError``.
+    """
     backend = _resolve(backend)
     if backend == "pallas":
         orig_shape = x.shape
@@ -178,10 +256,13 @@ def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
     zero padding (pad-as-(−1) + correction, paper C5).
 
     backend: 'pallas' (in-kernel im2col, no patch matrix in HBM) |
-    'jnp'/'ref' (im2col outside, the pre-subsystem path) | 'auto'.
-    ``block_oh``/``block_n`` tile the Pallas grid over (OH rows, C_out);
-    ``None`` auto-sizes.  ``block_n`` must be a multiple of 128 — invalid
-    values raise instead of being silently clamped up.
+    'jnp'/'ref' (im2col outside, the pre-subsystem path) | 'auto';
+    unknown strings raise ``ValueError``.  ``block_oh``/``block_n`` tile
+    the Pallas grid over (OH rows, C_out); ``None`` auto-sizes.
+    ``block_oh`` must be a positive multiple of 8 (sublane granularity)
+    and ``block_n`` a positive multiple of 128 (lane granularity) —
+    invalid values raise ``ValueError`` instead of being silently
+    clamped up.  The output is invariant to both (property-tested).
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -207,7 +288,11 @@ def binary_conv2d_bn_sign_packed(plan: dict, folded: dict,
     (B, OH, OW, ceil(C_out/32)) — the next binary conv layer's input,
     without the int32 activation ever leaving the kernel un-packed.
     ``folded``: {"tau", "flip"} from ``core.binary_layers.fold_bn_sign``.
-    Block knobs as in :func:`binary_conv2d_packed`.
+
+    backend and block knobs exactly as in :func:`binary_conv2d_packed`
+    (unknown backends and off-granularity blocks raise ``ValueError``);
+    the 128-lane ``block_n`` check also lands every output block on a
+    32-bit pack seam.
     """
     backend = _resolve(backend)
     if backend == "pallas":
@@ -233,11 +318,14 @@ def bitplane_conv2d_packed(plan: dict, x_uint8: jax.Array, *,
     integer input.  Returns (B, OH, OW, C_out) int32 == the exact integer
     conv of the raw input against sign(W) with true zero padding.
 
-    'pallas': plane extraction/packing is pure jnp bit ops
-    (``pack_bitplanes_uint8``) and the conv is ONE kernel launch — an
+    backend: 'pallas' — plane extraction/packing is pure jnp bit ops
+    (``pack_bitplanes_uint8``) and the conv is ONE kernel launch (an
     in-kernel plane loop over the VMEM-resident plane stack with the 2^i
-    weighting and rowsum pad correction folded into the epilogue.
-    'jnp'/'ref': the pre-fusion sequential 8-plane oracle.
+    weighting and rowsum pad correction folded into the epilogue);
+    'jnp'/'ref' — the pre-fusion sequential 8-plane oracle; 'auto' as
+    everywhere.  Unknown backends raise ``ValueError``; ``block_oh`` /
+    ``block_n`` validate exactly as in :func:`binary_conv2d_packed`
+    (``ValueError`` off sublane/lane granularity).
     """
     backend = _resolve(backend)
     nbits = plan["nbits"]
@@ -259,9 +347,13 @@ def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
                  backend: str = "auto") -> jax.Array:
     """Fused sign(BN(x)) + bit-pack along the last axis.
 
-    ``x``: (..., C) int32 (or any real) raw layer output.  Returns
+    ``x``: (..., C) int32 (or any real) raw layer output; ``tau``/``flip``
+    the folded BN threshold (``fold_bn_sign``).  Returns
     (..., ceil(C/32)) uint32 — bit-identical to
     ``pack_bits(apply_bn_sign_folded({tau, flip}, x))``.
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' ('jnp'/'ref' both run the
+    oracle); unknown strings raise ``ValueError``.
     """
     backend = _resolve(backend)
     lead = x.shape[:-1]
@@ -284,7 +376,11 @@ def binary_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     ``x``: (B, H, W, C_in) real, ``w``: (C_out, KH, KW, C_in) real.
     Returns (B, OH, OW, C_out) int32 == the integer dots of
     ``conv(sign(x), sign(w))`` with true zero padding.
-    ``block_oh``/``block_n`` forward to :func:`binary_conv2d_packed`.
+
+    backend as everywhere (unknown strings raise ``ValueError``);
+    ``block_oh``/``block_n`` forward to :func:`binary_conv2d_packed`
+    with the same validation (``ValueError`` off sublane/lane
+    granularity).
     """
     plan = _bconv.make_conv_plan(w, input_hw=x.shape[1:3], stride=stride,
                                  padding=padding)

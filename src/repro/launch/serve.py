@@ -1,67 +1,130 @@
-"""Serving launcher: prefill a prompt batch, decode N tokens.
+"""Packed-inference serving launcher (the Espresso prediction phase).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
-        --reduced --quant binary_weight --batch 4 --prompt-len 32 --new 16
+Builds a reduced BCNN/BMLP with random weights, registers it with the
+``train.serve.PackedInferenceServer`` (pack + fold BN ONCE via the
+weight cache), replays a deterministic arrival trace against the
+continuous-batching queue, and prints per-request p50/p99 latency,
+throughput, and the GEMV/GEMM route of every flush:
+
+    PYTHONPATH=src python -m repro.launch.serve --model bmlp \
+        --requests 32 --max-batch 8 --deadline-ms 5
+
+    # a (data, model) mesh behind the queue (forced host devices):
+    PYTHONPATH=src python -m repro.launch.serve --model bcnn --mesh 2,2
+
+    # CI smoke: tiny shapes, few requests
+    PYTHONPATH=src python -m repro.launch.serve --model bmlp --smoke
+
+The old LM prefill/decode demo lives in ``examples/serve_binary_lm.py``
+(the ``BatchedServer`` driver).
 """
 from __future__ import annotations
 
+import os
+import sys
+
+# Forced host devices must be set before ANY jax import (same pattern as
+# distributed/verify_sharded.py): pre-scan argv for --mesh, in both the
+# space-separated ("--mesh 2,2") and equals ("--mesh=2,2") forms.
+def _prescan_mesh(argv: list[str]) -> str | None:
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+_shape = _prescan_mesh(sys.argv)
+if _shape is not None:
+    try:
+        _n = 1
+        for _d in _shape.split(","):
+            _n *= int(_d)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={_n}")
+    except ValueError:
+        pass                                    # argparse will complain
+
 import argparse
+import statistics
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.core.quantize import QuantMode
-from repro.models import linear as LN
-from repro.models import model as M
+from repro.models import cnn
+from repro.train import serve as SV
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--quant", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--model", choices=("bcnn", "bmlp"), default="bmlp")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=5.0)
+    ap.add_argument("--arrival-ms", type=float, default=0.0,
+                    help="inter-arrival gap (0 = back-to-back)")
+    ap.add_argument("--backend", default="jnp",
+                    help="'jnp' | 'pallas' | 'ref' | 'auto' "
+                         "(pallas runs interpret-mode off-TPU)")
+    ap.add_argument("--mesh", default=None,
+                    help="data,model mesh behind the queue, e.g. 2,2")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes and request count")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
 
-    cfg = get_config(args.arch, quant=args.quant, reduced=args.reduced)
-    key = jax.random.PRNGKey(0)
-    params = M.init_model(key, cfg)
-    if cfg.quant.mode != QuantMode.FLOAT:
-        # pack ONCE at load (paper C2) — inference uses packed weights
-        params = LN.maybe_pack_tree(params, cfg.quant)
-
-    max_len = args.prompt_len + args.new
-    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                              cfg.vocab_size)
-    batch = {"tokens": toks}
-    if cfg.encoder_layers:
-        batch["enc_embeds"] = jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16)
-
+    params, spec, kind = cnn.demo_model(args.model, smoke=args.smoke)
+    srv = SV.PackedInferenceServer(max_batch=args.max_batch,
+                                   default_deadline=args.deadline_ms / 1e3)
     t0 = time.monotonic()
-    logits, cache = jax.jit(
-        lambda p, b: M.prefill(p, cfg, b, max_len))(params, batch)
-    print(f"prefill {args.prompt_len} tokens: "
-          f"{time.monotonic() - t0:.2f}s")
+    mesh = None
+    if args.mesh:
+        try:
+            shape = tuple(int(d) for d in args.mesh.split(","))
+            if len(shape) != 2 or any(d < 1 for d in shape):
+                raise ValueError(args.mesh)
+        except ValueError:
+            ap.error(f"--mesh must be 'data,model' positive ints, "
+                     f"got {args.mesh!r}")
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(shape, ("data", "model"))
+    srv.register("demo", params, spec, kind=kind, backend=args.backend,
+                 mesh=mesh)
+    eng = srv.engine()
+    print(f"registered {kind} (packed once in {time.monotonic() - t0:.2f}s)"
+          f" buckets={eng.buckets} batch_multiple={eng.batch_multiple}"
+          f" route@1={srv.route_for(1)} route@{args.max_batch}="
+          f"{srv.route_for(args.max_batch)}")
 
-    decode = jax.jit(lambda p, c, t, i: M.decode_step(p, cfg, t, c, i))
-    tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
+    rng = np.random.default_rng(0)
+    xs = rng.integers(0, 256, (args.requests, *eng.example_shape),
+                      dtype=np.uint8)
     t0 = time.monotonic()
-    for t in range(args.new - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(args.prompt_len + t))
-        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.monotonic() - t0
-    print(f"decoded {args.new - 1} steps in {dt:.2f}s "
-          f"({(args.new - 1) / max(dt, 1e-9):.1f} tok/s/seq)")
-    print("sample:", jnp.concatenate(out, axis=1)[0][:16].tolist())
+    for i in range(args.requests):
+        srv.submit(xs[i])
+        if args.arrival_ms:
+            time.sleep(args.arrival_ms / 1e3)
+        srv.step()
+    while srv.pending():
+        srv.step()
+        time.sleep(args.deadline_ms / 4e3)
+    wall = time.monotonic() - t0
+
+    lats = sorted(r.latency for r in srv.served)
+    p50 = statistics.median(lats)
+    p99 = SV.latency_percentile(lats, 0.99)
+    print(f"served {len(srv.served)} requests in {wall:.2f}s "
+          f"({len(srv.served) / wall:.1f} req/s)")
+    print(f"latency p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms")
+    for f in srv.flushes:
+        print(f"  flush batch={f.batch} bucket={f.bucket} route={f.route} "
+              f"wall={f.wall_s * 1e3:.2f}ms")
+    print(f"weight cache: {srv.cache.misses} pack(s), {srv.cache.hits} "
+          f"hit(s); scratch pool: {srv.pool.allocations} buffer(s) for "
+          f"{len(srv.flushes)} flushes")
 
 
 if __name__ == "__main__":

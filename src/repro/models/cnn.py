@@ -361,3 +361,92 @@ def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
     z = L.apply_binary_dense_prepacked(packed["denses"][n - 1], h,
                                        backend=backend)
     return L.apply_batchnorm(packed["bn_out"], z)
+
+
+# ---------------------------------------------------------------------------
+# Serving seams (train/serve.py): one uniform view over both networks
+# ---------------------------------------------------------------------------
+
+def packed_kind(packed: dict) -> str:
+    """'bcnn' | 'bmlp' from the shape of a ``pack_*`` tree.
+
+    The serving layer and the sharding rules both dispatch on this, so
+    the check lives once, next to the pack functions whose layout it
+    reads.  Raises ``ValueError`` for anything else.
+    """
+    if "convs" in packed:
+        return "bcnn"
+    if "layers" in packed:
+        return "bmlp"
+    raise ValueError(
+        f"not a pack_bcnn/pack_bmlp tree: keys {sorted(packed)}")
+
+
+def packed_input_shape(packed: dict) -> tuple[int, ...]:
+    """Per-example input shape (no batch axis) a packed forward consumes.
+
+    bcnn: ``(H, W, C_in)`` raw uint8; bmlp: ``(K,)`` raw uint8 — both
+    networks take fixed-precision input (the bit-plane first layer,
+    paper C4), so the serving scratch pool can stage requests without
+    knowing which network is behind the queue.
+    """
+    if packed_kind(packed) == "bcnn":
+        spec: BCNNSpec = packed["spec"]
+        return (*spec.input_hw, spec.c_in)
+    return (int(packed["layers"][0]["k_true"]),)
+
+
+def packed_dense_kw_words(packed: dict) -> int:
+    """Widest dense packed-K extent of the network, in uint32 words.
+
+    The K side of ``kernels.ops.dispatch_batch``: a batch routes
+    through the GEMV serving grid only if every dense layer's packed K
+    fits the resident activation block, so the widest layer decides
+    the route for the whole forward.
+    """
+    layers = (packed["denses"] if packed_kind(packed) == "bcnn"
+              else packed["layers"])
+    return max(int(p["w_packed"].shape[1]) for p in layers)
+
+
+def demo_model(kind: str, *, smoke: bool = False, seed: int = 0):
+    """Reduced evaluation-network preset + random params for demo
+    drivers — the serving CLI (``launch/serve.py``) and the serving
+    benchmark (``benchmarks/serve_latency.py``) both build from this
+    one place so their shapes cannot drift.  Returns
+    ``(params, spec, kind)``.  ``smoke`` picks CI-sized shapes.
+    """
+    key = jax.random.PRNGKey(seed)
+    if kind == "bcnn":
+        spec = BCNNSpec(
+            input_hw=(8, 8) if smoke else (16, 16), c_in=3,
+            stages=(ConvStage(64), ConvStage(64, pool=True)),
+            dense=(128, 10))
+        return init_bcnn(key, spec), spec, "bcnn"
+    if kind == "bmlp":
+        spec = BMLPSpec(sizes=(784, 256, 256, 10) if smoke
+                        else (784, 1024, 1024, 10))
+        return init_bmlp(key, spec), spec, "bmlp"
+    raise ValueError(f"kind must be 'bcnn' or 'bmlp', got {kind!r}")
+
+
+def make_packed_forward(packed: dict, *, backend: str = "auto",
+                        dense_stack: str = "auto"):
+    """Jitted single-device forward ``fwd(x_uint8) -> logits``.
+
+    Works for either packed network — the serving layer's default
+    engine, and the same call signature as
+    ``distributed.sharding.make_sharded_forward`` so a device mesh can
+    sit behind the request queue as a drop-in.  ``backend`` /
+    ``dense_stack`` validate as in the underlying forward (unknown
+    values raise at first call).
+    """
+    if packed_kind(packed) == "bcnn":
+        def fwd(x):
+            return bcnn_forward_packed(packed, x, backend=backend,
+                                       dense_stack=dense_stack)
+    else:
+        def fwd(x):
+            return bmlp_forward_packed(packed, x, backend=backend,
+                                       dense_stack=dense_stack)
+    return jax.jit(fwd)

@@ -1,22 +1,497 @@
-"""Serving: prefill / decode step factories + a batched request loop.
+"""Serving layer: the Espresso prediction-phase engine + the LM driver.
 
-``make_decode_step`` is the function the decode_32k / long_500k dry-run
-cells lower: one new token for the whole batch against a seq_len KV
-cache.  The server loop demonstrates continuous batching at the Python
-level (slot reuse on completion) — the per-step compute is the jitted
-decode step.
+Two servers live here (see ``docs/serving.md``):
+
+* :class:`PackedInferenceServer` — the paper's whole point made
+  operational: a forward-only engine over the packed BCNN/BMLP networks
+  (``models/cnn.py``) with a continuous-batching request queue
+  (admit/evict per step, deadline-aware flush, no head-of-line blocking
+  on ragged arrivals), a packed weight cache keyed by model config
+  (pack + fold BN thresholds ONCE, paper C2, reused across requests),
+  and a packed-activation scratch pool so steady-state serving does
+  zero repacking and zero per-flush host allocation.  Flushes of
+  batch ≤ 8 lower to the PR-4 N-major GEMV grid and larger flushes to
+  the fused GEMM/stack path — decided by the ONE
+  ``kernels.ops.dispatch_batch`` seam the kernels themselves consult.
+  A ``(data, model)`` mesh can sit behind the queue: pass
+  ``mesh=`` and the engine builds on
+  ``distributed.sharding.make_sharded_forward``, sizing its flush
+  buckets to the mesh's ``batch_multiple``.
+
+* :class:`BatchedServer` — the LM decode driver (continuous batching
+  over a shared KV-cache slot ring); ``make_prefill_step`` /
+  ``make_decode_step`` are the step factories the dry-run cells lower.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import cnn as C
 from repro.models import model as M
 
+
+# ---------------------------------------------------------------------------
+# Packed-inference serving (Espresso prediction phase)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One forward request in the continuous-batching queue.
+
+    ``x`` is a single example (shape ``models.cnn.packed_input_shape``,
+    uint8); ``deadline`` is the absolute clock time by which the request
+    must be flushed even if the batch is not full.  ``result`` /
+    ``completed_at`` are filled by the flush that served it.
+    """
+    rid: int
+    x: Any
+    deadline: float
+    submitted_at: float
+    result: np.ndarray | None = None
+    completed_at: float | None = None
+
+    @property
+    def latency(self) -> float | None:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushRecord:
+    """Per-flush bookkeeping: how many real requests rode which bucket
+    through which dense grid (``route`` ∈ {'gemv', 'gemm'})."""
+    batch: int
+    bucket: int
+    route: str
+    at: float
+    wall_s: float
+
+
+class PackedModelCache:
+    """Pack/fold-once cache keyed by model config (paper C2).
+
+    ``get_or_pack(key, pack_fn)`` returns the cached packed tree for
+    ``key`` or calls ``pack_fn()`` exactly once and caches the result —
+    re-registering a config the server has already seen (including
+    after swapping to a different model and back) never re-packs
+    weights or re-folds BN thresholds.  ``invalidate(key)`` drops an
+    entry when its underlying parameters changed (the ONLY correct
+    response to a weight update — packed trees are derived data).
+    ``hits``/``misses`` are observable for tests and benchmarks.
+    """
+
+    def __init__(self):
+        self._entries: dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_pack(self, key, pack_fn: Callable[[], Any]):
+        if key in self._entries:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._entries[key] = pack_fn()
+        return self._entries[key]
+
+    def invalidate(self, key) -> bool:
+        """Drop ``key``; True if it was cached."""
+        return self._entries.pop(key, None) is not None
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class ActivationPool:
+    """Reusable host staging buffers, one per (bucket, example shape).
+
+    Steady-state serving writes every flush into the same preallocated
+    buffer — ``allocations`` stops growing once all buckets are warm
+    (asserted by ``benchmarks/serve_latency.py``), so the request path
+    allocates nothing per flush.  Inter-stage activations never appear
+    here at all: they stay bit-packed on device inside the jitted
+    forward (the fused-epilogue contract, ``docs/kernels.md``).
+    """
+
+    def __init__(self):
+        self._bufs: dict[tuple, np.ndarray] = {}
+        self.allocations = 0
+
+    def batch_buffer(self, bucket: int, example_shape: tuple[int, ...],
+                     dtype=np.uint8) -> np.ndarray:
+        key = (bucket, tuple(example_shape), np.dtype(dtype).str)
+        buf = self._bufs.get(key)
+        if buf is None:
+            self.allocations += 1
+            buf = np.zeros((bucket, *example_shape), dtype)
+            self._bufs[key] = buf
+        return buf
+
+
+@dataclasses.dataclass
+class _Engine:
+    """One registered model: its packed tree + compiled forward + the
+    static facts the queue needs to size and route flushes."""
+    kind: str
+    packed: Any
+    fwd: Callable[[Any], jax.Array]
+    example_shape: tuple[int, ...]
+    kw_words: int
+    batch_multiple: int
+    buckets: tuple[int, ...]
+
+
+def _default_buckets(max_batch: int) -> tuple[int, ...]:
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(sorted(set(out)))
+
+
+class PackedInferenceServer:
+    """Continuous-batching server over the packed BCNN/BMLP forwards.
+
+    Queue lifecycle (``docs/serving.md``): ``submit`` admits a request
+    FIFO with an absolute flush ``deadline``; every ``step`` flushes
+    (a) all full ``max_batch`` windows and (b) — once the OLDEST
+    pending deadline has expired — everything still queued, padded up
+    to the smallest warm bucket.  Arrivals after a flush started simply
+    ride the next one, so a ragged arrival can neither block earlier
+    requests (they flush on their own deadline) nor be blocked by them
+    (the deadline flush takes the whole queue, not just the expired
+    prefix).  ``cancel`` evicts a queued request; ``max_queue`` bounds
+    admission (``submit`` raises ``RuntimeError`` when full — the
+    backpressure seam).
+
+    Batches are padded to power-of-two buckets (rounded up to the
+    engine's ``batch_multiple`` when a mesh sits behind the queue) so
+    the compiled-forward cache stays finite; padded rows are zeros and
+    their outputs are discarded — served outputs are bit-identical to
+    the direct ``*_forward_packed`` call on the unpadded batch
+    (``tests/test_serve_batching.py``).  Flushes of bucket ≤ 8 lower
+    to the N-major GEMV grid, larger ones to the blocked GEMM / resident
+    stack — the ``kernels.ops.dispatch_batch`` seam, recorded per flush
+    in ``flushes``.
+    """
+
+    def __init__(self, *, max_batch: int = 32,
+                 buckets: tuple[int, ...] | None = None,
+                 default_deadline: float = 0.010,
+                 max_queue: int | None = None,
+                 completed_mailbox: int = 1024,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self._bucket_template = (tuple(sorted(set(buckets)))
+                                 if buckets else _default_buckets(max_batch))
+        if self._bucket_template[-1] < max_batch:
+            raise ValueError(
+                f"largest bucket {self._bucket_template[-1]} smaller than "
+                f"max_batch {max_batch}")
+        self.default_deadline = default_deadline
+        self.max_queue = max_queue
+        self._clock = clock
+        self.cache = PackedModelCache()
+        self.pool = ActivationPool()
+        self._engines: dict[Any, _Engine] = {}
+        self._active: Any = None
+        self._queue: collections.deque[ServeRequest] = collections.deque()
+        # rid -> completed request, claimable via take(); bounded FIFO so
+        # callers that consume step()/flush() returns directly (and never
+        # claim) cannot leak the mailbox.  served/flushes are bounded the
+        # same way — they are observability history, and an unbounded
+        # list of requests (each holding its input and result row) would
+        # be a steady-state leak in a long-running server.
+        self._completed: collections.OrderedDict[int, ServeRequest] = \
+            collections.OrderedDict()
+        self._completed_cap = max(completed_mailbox, 2 * max_batch)
+        self._next_rid = 0
+        self.flushes: list[FlushRecord] = []
+        self.served: list[ServeRequest] = []
+
+    # -- model registry ----------------------------------------------------
+
+    def register(self, key, params=None, spec=None, *, kind: str | None = None,
+                 packed=None, backend: str = "auto",
+                 dense_stack: str = "auto", mesh=None) -> Any:
+        """Register a model config under ``key`` and activate it if the
+        server is idle.
+
+        Either pass float ``params`` + ``spec`` (+ ``kind`` 'bcnn' |
+        'bmlp') — the weight cache packs + folds ONCE per key — or a
+        pre-``pack_*`` tree via ``packed=``.  Re-registering a known key
+        is a cache hit: neither the packed tree nor the compiled
+        forwards are rebuilt.  ``mesh`` puts a ``(data, model)`` device
+        mesh behind the queue (``make_sharded_forward``); flush buckets
+        are then rounded up to the mesh's data-axis multiple.
+        """
+        if key not in self._engines:
+            self._engines[key] = self._build_engine(
+                key, params, spec, kind=kind, packed=packed,
+                backend=backend, dense_stack=dense_stack, mesh=mesh)
+        else:
+            # touch the weight cache so a re-register is an observable hit
+            self.cache.get_or_pack(key, lambda: self._engines[key].packed)
+        if self._active is None:
+            self._active = key
+        return key
+
+    def _build_engine(self, key, params, spec, *, kind, packed, backend,
+                      dense_stack, mesh) -> _Engine:
+        if packed is not None:
+            packed_tree = self.cache.get_or_pack(key, lambda: packed)
+        else:
+            if kind not in ("bcnn", "bmlp"):
+                raise ValueError(
+                    f"kind must be 'bcnn' or 'bmlp', got {kind!r}")
+            pack = C.pack_bcnn if kind == "bcnn" else C.pack_bmlp
+            packed_tree = self.cache.get_or_pack(
+                key, lambda: pack(params, spec))
+        kind = C.packed_kind(packed_tree)
+        if mesh is not None:
+            from repro.distributed.sharding import make_sharded_forward
+            fwd = make_sharded_forward(packed_tree, mesh, backend=backend,
+                                       dense_stack=dense_stack)
+            batch_multiple = fwd.batch_multiple
+        else:
+            fwd = C.make_packed_forward(packed_tree, backend=backend,
+                                        dense_stack=dense_stack)
+            batch_multiple = 1
+        buckets = tuple(sorted({_ceil_mult(b, batch_multiple)
+                                for b in self._bucket_template}))
+        return _Engine(kind=kind, packed=packed_tree, fwd=fwd,
+                       example_shape=C.packed_input_shape(packed_tree),
+                       kw_words=C.packed_dense_kw_words(packed_tree),
+                       batch_multiple=batch_multiple, buckets=buckets)
+
+    def use(self, key) -> list[ServeRequest]:
+        """Switch the active model.  Pending requests were submitted
+        against the current model, so they are force-flushed first; the
+        completions are returned.  Compiled forwards and packed weights
+        of BOTH models stay warm — swapping back is free (cache hit)."""
+        if key not in self._engines:
+            raise KeyError(f"unknown model key {key!r}")
+        done = self.flush() if self._queue else []
+        self._active = key
+        return done
+
+    def invalidate(self, key) -> list[ServeRequest]:
+        """Evict ``key`` from the weight cache and engine registry (call
+        after a weight update; the next ``register`` re-packs).
+
+        Requests queued against the active model were admitted under the
+        OLD weights, so invalidating it force-flushes them first (same
+        contract as :meth:`use`); the completions are returned.
+        """
+        done = (self.flush()
+                if key == self._active and self._queue else [])
+        self.cache.invalidate(key)
+        self._engines.pop(key, None)
+        if self._active == key:
+            self._active = None
+        return done
+
+    def engine(self, key=None) -> _Engine:
+        """The registered engine for ``key`` (active model if None) —
+        read-only introspection for tests, benchmarks, and the sharded
+        verifier (packed tree, compiled forward, buckets, route facts)."""
+        key = self._active if key is None else key
+        if key not in self._engines:
+            raise KeyError(f"unknown model key {key!r}")
+        return self._engines[key]
+
+    # -- queue -------------------------------------------------------------
+
+    @property
+    def active(self):
+        return self._active
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, x, *, deadline: float | None = None) -> int:
+        """Admit one example FIFO; returns its rid.  ``deadline`` is
+        seconds from now (``default_deadline`` if None).  Raises
+        ``RuntimeError`` when ``max_queue`` requests are already
+        pending (backpressure — the caller sheds or retries)."""
+        if self._active is None:
+            raise RuntimeError("no model registered")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            raise RuntimeError(
+                f"queue full ({self.max_queue} pending) — backpressure")
+        now = self._clock()
+        dl = self.default_deadline if deadline is None else deadline
+        req = ServeRequest(rid=self._next_rid, x=x, deadline=now + dl,
+                           submitted_at=now)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        """Evict a still-queued request; True if it was pending."""
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                return True
+        return False
+
+    def step(self, now: float | None = None) -> list[ServeRequest]:
+        """One scheduling step: flush every full ``max_batch`` window,
+        then — if the oldest pending deadline has expired — flush the
+        rest of the queue too.  Returns the requests completed by this
+        step (possibly empty: a partial batch whose deadline is still
+        in the future keeps waiting for riders)."""
+        now = self._clock() if now is None else now
+        done: list[ServeRequest] = []
+        while len(self._queue) >= self.max_batch:
+            done += self._flush_window(self.max_batch)
+        if self._queue and min(r.deadline for r in self._queue) <= now:
+            while self._queue:
+                done += self._flush_window(self.max_batch)
+        return done
+
+    def flush(self) -> list[ServeRequest]:
+        """Force-drain the queue regardless of deadlines (shutdown /
+        model swap)."""
+        done: list[ServeRequest] = []
+        while self._queue:
+            done += self._flush_window(self.max_batch)
+        return done
+
+    def serve(self, xs, *, deadline: float | None = None
+              ) -> list[np.ndarray]:
+        """Convenience: submit every example, drain, return results in
+        submission order (the batch-API view of the queue).
+
+        The drain flushes the WHOLE queue, so requests other callers had
+        pending complete too; their completions stay claimable via
+        :meth:`take` (they are not lost to this caller's return value).
+        Own results are collected from the flush returns directly, so
+        ``serve`` works for request counts beyond the mailbox cap.
+        Backpressure is all-or-nothing: if the batch would overflow
+        ``max_queue``, ``RuntimeError`` is raised before ANY submit, so
+        a failed call never strands half its requests in the queue.
+        """
+        xs = list(xs)
+        if self.max_queue is not None and \
+                len(self._queue) + len(xs) > self.max_queue:
+            raise RuntimeError(
+                f"serve({len(xs)}) would overflow max_queue="
+                f"{self.max_queue} ({len(self._queue)} pending) — "
+                "backpressure")
+        rids = [self.submit(x, deadline=deadline) for x in xs]
+        by_rid = {r.rid: r for r in self.flush()}
+        for rid in rids:                       # claimed here, not via take()
+            self._completed.pop(rid, None)
+        return [np.asarray(by_rid[rid].result) for rid in rids]
+
+    def take(self, rid: int) -> ServeRequest | None:
+        """Claim a completed request by rid (None if unknown / still
+        pending).  Every flush parks its completions here until claimed,
+        so a caller polling ``step()`` for its own rid still gets its
+        result even when ANOTHER caller's flush/serve drained the queue
+        — each completion is delivered exactly once per channel."""
+        return self._completed.pop(rid, None)
+
+    def route_for(self, batch: int) -> str:
+        """Which dense grid a flush of ``batch`` requests lowers to for
+        the ACTIVE model ('gemv' | 'gemm') — ``kernels.ops.dispatch_batch``
+        on the padded bucket and the model's widest packed-K extent.
+        Raises ``RuntimeError`` when no model is active."""
+        eng = self._active_engine()
+        return kops.dispatch_batch(self._bucket_for(eng, batch),
+                                   eng.kw_words)
+
+    # -- flush machinery ---------------------------------------------------
+
+    def _active_engine(self) -> _Engine:
+        if self._active is None:
+            raise RuntimeError("no model registered")
+        return self._engines[self._active]
+
+    def _bucket_for(self, eng: _Engine, n: int) -> int:
+        for b in eng.buckets:
+            if b >= n:
+                return b
+        return eng.buckets[-1]
+
+    def _flush_window(self, limit: int) -> list[ServeRequest]:
+        reqs = [self._queue.popleft()
+                for _ in range(min(limit, len(self._queue)))]
+        if not reqs:
+            return []
+        eng = self._active_engine()
+        bucket = self._bucket_for(eng, len(reqs))
+        t0 = self._clock()
+        buf = self.pool.batch_buffer(bucket, eng.example_shape)
+        for i, r in enumerate(reqs):
+            buf[i] = np.asarray(r.x, buf.dtype)
+        buf[len(reqs):] = 0
+        out = np.asarray(eng.fwd(buf))      # ONE host round-trip per flush
+        now = self._clock()
+        for i, r in enumerate(reqs):
+            r.result = out[i]
+            r.completed_at = now
+        self.flushes.append(FlushRecord(
+            batch=len(reqs), bucket=bucket,
+            route=kops.dispatch_batch(bucket, eng.kw_words),
+            at=now, wall_s=now - t0))
+        self.served += reqs
+        del self.served[:-self._completed_cap]
+        del self.flushes[:-self._completed_cap]
+        for r in reqs:
+            self._completed[r.rid] = r
+        while len(self._completed) > self._completed_cap:
+            self._completed.popitem(last=False)
+        return reqs
+
+
+def latency_percentile(sorted_vals, q: float):
+    """Nearest-rank percentile over a pre-sorted latency list — the one
+    definition the serving CLI (``launch/serve.py``) and the serving
+    benchmark (``benchmarks/serve_latency.py``) both report, so the two
+    cannot drift."""
+    return sorted_vals[min(len(sorted_vals) - 1,
+                           int(len(sorted_vals) * q))]
+
+
+class SimClock:
+    """Deterministic monotonic clock for tests and benches: inject as
+    ``PackedInferenceServer(clock=...)`` and drive time by hand."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving (scaffold models): step factories + slot-ring driver
+# ---------------------------------------------------------------------------
 
 def make_prefill_step(cfg: ArchConfig, max_len: int):
     def prefill_step(params, batch):
@@ -28,12 +503,6 @@ def make_decode_step(cfg: ArchConfig):
     def decode_step(params, cache, tokens, idx):
         return M.decode_step(params, cfg, tokens, cache, idx)
     return decode_step
-
-
-def make_forward(cfg: ArchConfig):
-    def fwd(params, batch):
-        return M.loss_fn(params, cfg, batch)
-    return fwd
 
 
 @dataclasses.dataclass
@@ -51,7 +520,7 @@ class BatchedServer:
     All sequences share one ring of decode slots; finished requests free
     their slot for the next queued prompt.  Single-host demo driver for
     examples/serve_binary_lm.py — the distributed serving path is the
-    jitted step itself (launch/serve.py).
+    jitted step itself.
     """
 
     def __init__(self, cfg: ArchConfig, params, batch_slots: int,

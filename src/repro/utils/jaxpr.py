@@ -27,6 +27,30 @@ def subjaxprs(param):
             yield from subjaxprs(e)
 
 
+def pallas_grids(fn, *args) -> list[tuple[int, ...]]:
+    """Launch grid of every pallas_call in ``fn``'s jaxpr, in trace order.
+
+    The serving subsystem's GEMV-vs-GEMM evidence is launch-*shape*
+    level: a batch ≤ 8 dense flush must lower to the N-major 1-D GEMV
+    grid and a large flush to the 3-D (M, N, K) blocked GEMM grid
+    (``kernels.ops.dispatch_batch``).  Recurses into jit bodies like
+    :func:`count_pallas_calls`.
+    """
+    grids: list[tuple[int, ...]] = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                grids.append(tuple(eqn.params["grid_mapping"].grid))
+                continue
+            for p in eqn.params.values():
+                for sub in subjaxprs(p):
+                    walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return grids
+
+
 def count_pallas_calls(fn, *args) -> int:
     """Number of pallas_call primitives in ``fn``'s jaxpr — the
     kernel-launch count of the traced fn, recursing into jit bodies."""

@@ -115,8 +115,9 @@ def test_gemv_path_bit_exact_across_sublane_boundary():
     b = jax.random.normal(jax.random.fold_in(key, 1), (300, 500))
     want = np.asarray(ref.binary_matmul_ref(a, b))
     kwp = B.packed_width(500)
-    assert BMM._use_gemv(8, kwp) and not BMM._use_gemv(9, kwp)
-    assert not BMM._use_gemv(1, BMM._GEMV_MAX_KW + 128)
+    assert BMM.dispatch_batch(8, kwp) == "gemv"
+    assert BMM.dispatch_batch(9, kwp) == "gemm"
+    assert BMM.dispatch_batch(1, BMM._GEMV_MAX_KW + 128) == "gemm"
     for m in (1, 8, 9):
         got = BMM.binary_matmul_packed(B.pack_bits(a[:m]), B.pack_bits(b),
                                        k_true=500, interpret=True)

@@ -1,0 +1,95 @@
+"""Docs integrity: every intra-repo reference in docs/*.md + README.md
+must point at a file that exists.
+
+Two classes of reference are checked:
+
+* markdown links ``[text](target)`` with a relative target (external
+  schemes and pure #anchors are skipped) — resolved against the file's
+  own directory;
+* backticked repo paths like ``src/repro/train/serve.py`` or
+  ``tests/test_serve_batching.py::test_x`` — resolved against the
+  file's directory first, then the repo root (docs habitually name
+  root-relative paths).
+
+The CI ``docs`` job runs this file; it also rides tier-1 so a PR that
+moves a file learns about dangling docs immediately.
+"""
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backtick tokens that look like repo file paths (optionally with a
+# ::test suffix); globs and bench-row names don't match the extension
+_MD_PATH = re.compile(
+    r"`([\w][\w./-]*\.(?:py|md|json|yml|yaml|txt))(?:::[\w.\[\]-]+)?`")
+
+
+def _doc_files():
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            files.append(os.path.join(docs, name))
+    return files
+
+
+def _repo_file_suffixes():
+    suffixes = set()
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d != "__pycache__"]
+        for f in filenames:
+            rel = os.path.relpath(os.path.join(dirpath, f), ROOT)
+            parts = rel.replace(os.sep, "/").split("/")
+            for i in range(len(parts)):
+                suffixes.add("/".join(parts[i:]))
+    return suffixes
+
+
+_SUFFIXES = _repo_file_suffixes()
+
+
+def _resolve(base_dir: str, target: str) -> bool:
+    target = target.split("#", 1)[0]
+    if not target:
+        return True                       # same-file anchor
+    cand = os.path.normpath(os.path.join(base_dir, target))
+    alt = os.path.normpath(os.path.join(ROOT, target))
+    if os.path.exists(cand) or os.path.exists(alt):
+        return True
+    # docs shorthand: a module named relative to its package
+    # (`binary_matmul.py`, `kernels/ops.py`) resolves if some repo file
+    # ends with that path; truly dangling names still fail.
+    return os.path.normpath(target).replace(os.sep, "/") in _SUFFIXES
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=lambda p: os.path.relpath(p, ROOT))
+def test_intra_repo_references_resolve(path):
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    broken = []
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target) or \
+                target.startswith("#"):
+            continue                      # external scheme / anchor
+        if not _resolve(base, target):
+            broken.append(f"link -> {target}")
+    for m in _MD_PATH.finditer(text):
+        if not _resolve(base, m.group(1)):
+            broken.append(f"path -> `{m.group(1)}`")
+    assert not broken, (
+        f"{os.path.relpath(path, ROOT)} has dangling references:\n  "
+        + "\n  ".join(broken))
+
+
+def test_docs_exist():
+    """The documented doc set itself: the docs archetype headliners."""
+    for rel in ("README.md", "docs/serving.md", "docs/architecture.md",
+                "docs/kernels.md"):
+        assert os.path.exists(os.path.join(ROOT, rel)), rel
