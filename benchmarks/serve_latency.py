@@ -10,12 +10,17 @@ prediction-phase engine) on CPU:
   picked,
 * pack-once / zero-steady-state-allocation evidence: the weight cache
   packs each config exactly once regardless of request count, and the
-  scratch pool stops allocating once its buckets are warm.
+  scratch pool stops allocating once its buckets are warm,
+* a ``telemetry`` section: the instrumented run's metrics snapshot +
+  span names, and the tracer-enabled vs tracer-disabled p50 (the
+  disabled span path is one attribute check; the measured overhead
+  ratio is the standing evidence for it).
 
     PYTHONPATH=src python -m benchmarks.serve_latency          # full
     REPRO_BENCH_SMOKE=1 ... python -m benchmarks.serve_latency # CI-sized
 
-Writes ``experiments/BENCH_serve.json``.
+Writes ``experiments/BENCH_serve.json`` as
+``{"rows": [...], "telemetry": {...}}``.
 """
 from __future__ import annotations
 
@@ -57,13 +62,16 @@ def trace_rows(model: str, *, requests: int, deadline_s: float = 0.005,
     srv.flushes.clear()
 
     t0 = time.monotonic()
+    # Completions come from the step() returns, not srv.served — served
+    # is bounded history (train.serve truncates it to the mailbox cap).
+    done = []
     for i in range(requests):
         srv.submit(xs[i])
-        srv.step()
+        done += srv.step()
     while srv.pending():
-        srv.step()
+        done += srv.step()
     wall = time.monotonic() - t0
-    lats = sorted(r.latency for r in srv.served)
+    lats = sorted(r.latency for r in done)
     assert len(lats) == requests
     batches = [f.batch for f in srv.flushes]
     note = (f"{requests} reqs, deadline={deadline_s * 1e3:.0f}ms, "
@@ -133,6 +141,51 @@ def gemv_row() -> list[tuple]:
              "(interpret mode on CPU)")]
 
 
+def telemetry_section(model: str = "bmlp", *, requests: int,
+                      deadline_s: float = 0.005,
+                      max_batch: int = 8) -> dict:
+    """Identical arrival traces with the tracer disabled and enabled:
+    the p50 pair is the measured cost of the span instrumentation
+    (disabled path = one attribute check per span), and the enabled
+    run's metrics snapshot + span taxonomy are carried as the
+    machine-readable serving-health record."""
+    def run(enable_tracing: bool):
+        params, spec, kind = _build(model)
+        srv = SV.PackedInferenceServer(max_batch=max_batch,
+                                       default_deadline=deadline_s)
+        if enable_tracing:
+            srv.telemetry.enable_tracing()
+        srv.register(model, params, spec, kind=kind, backend="jnp")
+        eng = srv.engine()
+        rng = np.random.default_rng(0)
+        xs = rng.integers(0, 256, (requests, *eng.example_shape),
+                          dtype=np.uint8)
+        for b in eng.buckets:                  # warm every bucket
+            if b <= max_batch:
+                srv.serve(list(xs[:b]))
+        done = []
+        for i in range(requests):
+            srv.submit(xs[i])
+            done += srv.step()
+        while srv.pending():
+            done += srv.step()
+        return statistics.median(r.latency for r in done), srv
+
+    p50_off, _ = run(False)
+    p50_on, srv = run(True)
+    tr = srv.telemetry.tracer
+    return {
+        "model": model,
+        "requests": requests,
+        "p50_latency_us": {"tracer_disabled": p50_off * 1e6,
+                           "tracer_enabled": p50_on * 1e6},
+        "tracer_enabled_overhead_ratio": p50_on / p50_off,
+        "trace_events": len(tr.events),
+        "span_names": tr.span_names(),
+        "metrics": srv.telemetry.metrics.snapshot(),
+    }
+
+
 def rows() -> list[tuple]:
     out = []
     reqs = 16 if SMOKE else 48
@@ -144,10 +197,12 @@ def rows() -> list[tuple]:
     return out
 
 
-def write_bench_json(rs: list[tuple],
+def write_bench_json(rs: list[tuple], telemetry: dict,
                      path="experiments/BENCH_serve.json") -> None:
     os.makedirs(os.path.dirname(path), exist_ok=True)
-    payload = [{"name": n, "value": v, "note": note} for n, v, note in rs]
+    payload = {"rows": [{"name": n, "value": v, "note": note}
+                        for n, v, note in rs],
+               "telemetry": telemetry}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -156,7 +211,12 @@ def main() -> None:
     rs = rows()
     for name, v, note in rs:
         print(f"{name},{v:.1f},{note}")
-    write_bench_json(rs)
+    tel = telemetry_section(requests=16 if SMOKE else 48)
+    print(f"telemetry: tracer overhead ratio "
+          f"{tel['tracer_enabled_overhead_ratio']:.3f} "
+          f"({tel['trace_events']} events, "
+          f"{len(tel['span_names'])} span kinds)")
+    write_bench_json(rs, tel)
 
 
 if __name__ == "__main__":

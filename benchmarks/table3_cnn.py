@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core import binary_layers as L
 from repro.kernels import ops as kops
 from repro.models import cnn
-from repro.utils.jaxpr import count_pallas_calls, subjaxprs
+from repro.utils.jaxpr import count_pallas_calls, max_intermediate_bytes
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
@@ -39,35 +39,11 @@ def _time(fn, *args, reps=3):
     return (time.monotonic() - t0) / reps * 1e6
 
 
-def _max_intermediate_bytes(fn, *args) -> tuple[int, tuple]:
-    """Largest intermediate array any equation produces, recursing into
-
-    nested jaxprs (jit bodies) but NOT into pallas_call kernels — a
-    kernel's internals live in VMEM, so its HBM footprint is just its
-    declared outputs.  This is the op-count-level evidence that the
-    Pallas conv path never stages the (B·H'·W', KH·KW·Cw) patch matrix.
-    """
-    closed = jax.make_jaxpr(fn)(*args)
-    best = [0, ()]
-
-    def visit_aval(aval):
-        if hasattr(aval, "shape") and hasattr(aval, "dtype"):
-            nbytes = int(aval.size) * aval.dtype.itemsize
-            if nbytes > best[0]:
-                best[0], best[1] = nbytes, tuple(aval.shape)
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            for v in eqn.outvars:
-                visit_aval(v.aval)
-            if eqn.primitive.name == "pallas_call":
-                continue
-            for p in eqn.params.values():
-                for sub in subjaxprs(p):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return best[0], best[1]
+# Largest-intermediate evidence ("the Pallas conv path never stages the
+# (B·H'·W', KH·KW·Cw) patch matrix") now comes from the shared walker in
+# utils/jaxpr.py — the same traversal the launch counts and the
+# telemetry probes use.
+_max_intermediate_bytes = max_intermediate_bytes
 
 
 def rows() -> list[tuple]:

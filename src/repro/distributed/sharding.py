@@ -522,12 +522,15 @@ class ShardedForward:
     """
 
     def __init__(self, jitted, arrays, shard_plan: dict, mesh: Mesh,
-                 kind: str):
+                 kind: str, telemetry=None):
+        from repro import telemetry as _telemetry
         self._jitted = jitted
         self._arrays = arrays
         self.shard_plan = shard_plan
         self.mesh = mesh
         self.kind = kind
+        self.telemetry = (telemetry if telemetry is not None
+                          else _telemetry.default())
 
     @property
     def batch_multiple(self) -> int:
@@ -539,7 +542,18 @@ class ShardedForward:
         return mult
 
     def __call__(self, x):
-        return self._jitted(self._arrays, x)
+        tr = self.telemetry.tracer
+        if not tr.enabled:
+            return self._jitted(self._arrays, x)
+        # Traced path only: splitting dispatch from block costs a
+        # block_until_ready the async-dispatch steady state must not
+        # pay, so the untraced fast path above stays one call.
+        with tr.span("sharded.dispatch", mesh=list(self.mesh.shape.values()),
+                     kind=self.kind):
+            out = self._jitted(self._arrays, x)
+        with tr.span("sharded.block"):
+            jax.block_until_ready(out)
+        return out
 
     def lower(self, x):
         return self._jitted.lower(self._arrays, x)
@@ -547,7 +561,8 @@ class ShardedForward:
 
 def make_sharded_forward(packed: Any, mesh: Mesh, *,
                          backend: str = "auto",
-                         dense_stack: str = "auto") -> ShardedForward:
+                         dense_stack: str = "auto",
+                         telemetry=None) -> ShardedForward:
     """Shard-mapped packed BCNN/BMLP forward on a ('data', 'model') mesh.
 
     Batch shards over 'data'; every word-divisible stage C_out-shards
@@ -596,4 +611,5 @@ def make_sharded_forward(packed: Any, mesh: Mesh, *,
 
     sm = shard_map(fwd, mesh=mesh, in_specs=(arr_specs, x_spec),
                    out_specs=out_spec, check_rep=False)
-    return ShardedForward(jax.jit(sm), arrays, plan, mesh, kind)
+    return ShardedForward(jax.jit(sm), arrays, plan, mesh, kind,
+                          telemetry=telemetry)

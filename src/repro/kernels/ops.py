@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import binarize as B
 from repro.kernels import binary_conv as _bconv
 from repro.kernels import binary_matmul as _bmm
@@ -79,12 +80,20 @@ def dispatch_batch(m: int, kw_words: int) -> str:
 
     Raises ``ValueError`` if ``m`` or ``kw_words`` is not a positive
     integer.
+
+    Every routing decision bumps ``ops.dispatch.gemv`` /
+    ``ops.dispatch.gemm`` on the process-wide telemetry registry
+    (``telemetry.default()``) — dispatch has no object to hang a
+    registry on, and the counter pair is the CI invariant "a batch-1
+    serve never took the GEMM grid" (``docs/observability.md``).
     """
     if m < 1 or kw_words < 1:
         raise ValueError(
             f"dispatch_batch needs positive (m, kw_words), got "
             f"({m}, {kw_words})")
-    return _bmm.dispatch_batch(m, kw_words)
+    route = _bmm.dispatch_batch(m, kw_words)
+    telemetry.default().metrics.counter(f"ops.dispatch.{route}").inc()
+    return route
 
 
 def binary_matmul(a: jax.Array, b: jax.Array, *, backend: str = "auto",

@@ -48,6 +48,7 @@ if _shape is not None:
         pass                                    # argparse will complain
 
 import argparse
+import json
 import statistics
 import time
 
@@ -72,6 +73,13 @@ def main() -> None:
                     help="data,model mesh behind the queue, e.g. 2,2")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized shapes and request count")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the server's telemetry metrics snapshot "
+                         "as JSON after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome "
+                         "trace_event JSON (open in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
@@ -79,6 +87,8 @@ def main() -> None:
     params, spec, kind = cnn.demo_model(args.model, smoke=args.smoke)
     srv = SV.PackedInferenceServer(max_batch=args.max_batch,
                                    default_deadline=args.deadline_ms / 1e3)
+    if args.trace_out:
+        srv.telemetry.enable_tracing()
     t0 = time.monotonic()
     mesh = None
     if args.mesh:
@@ -103,21 +113,26 @@ def main() -> None:
     xs = rng.integers(0, 256, (args.requests, *eng.example_shape),
                       dtype=np.uint8)
     t0 = time.monotonic()
+    # Collect completions from the step() returns, NOT from srv.served:
+    # served is bounded observability history (truncated to the mailbox
+    # cap), so percentiles over it silently drop the oldest requests
+    # once --requests exceeds the cap.
+    done = []
     for i in range(args.requests):
         srv.submit(xs[i])
         if args.arrival_ms:
             time.sleep(args.arrival_ms / 1e3)
-        srv.step()
+        done += srv.step()
     while srv.pending():
-        srv.step()
+        done += srv.step()
         time.sleep(args.deadline_ms / 4e3)
     wall = time.monotonic() - t0
 
-    lats = sorted(r.latency for r in srv.served)
+    lats = sorted(r.latency for r in done)
     p50 = statistics.median(lats)
     p99 = SV.latency_percentile(lats, 0.99)
-    print(f"served {len(srv.served)} requests in {wall:.2f}s "
-          f"({len(srv.served) / wall:.1f} req/s)")
+    print(f"served {len(done)} requests in {wall:.2f}s "
+          f"({len(done) / wall:.1f} req/s)")
     print(f"latency p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms")
     for f in srv.flushes:
         print(f"  flush batch={f.batch} bucket={f.bucket} route={f.route} "
@@ -125,6 +140,13 @@ def main() -> None:
     print(f"weight cache: {srv.cache.misses} pack(s), {srv.cache.hits} "
           f"hit(s); scratch pool: {srv.pool.allocations} buffer(s) for "
           f"{len(srv.flushes)} flushes")
+    if args.metrics:
+        print(json.dumps(srv.telemetry.metrics.snapshot(), indent=1,
+                         sort_keys=True))
+    if args.trace_out:
+        srv.telemetry.tracer.export(args.trace_out)
+        print(f"wrote {len(srv.telemetry.tracer.events)} trace events -> "
+              f"{args.trace_out} (open in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

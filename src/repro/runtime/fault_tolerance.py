@@ -25,6 +25,7 @@ from typing import Callable
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               load_checkpoint)
+from repro.telemetry import MetricsRegistry
 
 
 class StepFailure(RuntimeError):
@@ -52,16 +53,32 @@ class Supervisor:
     """Runs ``step_fn(state, step_idx) -> state, metrics`` with restart.
 
     ``state`` must be a pytree checkpointable by repro.checkpoint.
+
+    Restart/straggler/heartbeat counts are mirrored into a telemetry
+    metrics registry (``supervisor.*`` — pass a shared one via
+    ``metrics=``, e.g. the serving registry, so one snapshot covers the
+    whole process; a fresh registry is created otherwise).  The
+    in-memory :class:`SupervisorReport` stays the ``run()`` return
+    value; the registry is the aggregatable (snapshot/merge) view of
+    the same counts, and the two are kept in lock-step by
+    :meth:`_record`.
     """
 
     def __init__(self, cfg: SupervisorConfig, init_state_fn: Callable,
-                 step_fn: Callable, shardings=None):
+                 step_fn: Callable, shardings=None,
+                 metrics: MetricsRegistry | None = None):
         self.cfg = cfg
         self.init_state_fn = init_state_fn
         self.step_fn = step_fn
         self.shardings = shardings
         self.ckpt = AsyncCheckpointer(cfg.ckpt_dir)
         self.report = SupervisorReport()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_restarts = self.metrics.counter("supervisor.restarts")
+        self._m_stragglers = self.metrics.counter(
+            "supervisor.stragglers_redispatched")
+        self._m_heartbeats = self.metrics.counter("supervisor.heartbeats")
+        self._m_steps = self.metrics.gauge("supervisor.steps_done")
         self._durations: list[float] = []
 
     def _restore_or_init(self):
@@ -96,6 +113,7 @@ class Supervisor:
                     if dt > deadline:
                         # straggler: bounded speculative re-dispatch
                         self.report.stragglers_redispatched += 1
+                        self._m_stragglers.inc()
                         t0 = time.monotonic()
                         state, metrics = self.step_fn(state, i)
                         dt = time.monotonic() - t0
@@ -103,7 +121,9 @@ class Supervisor:
                     if len(self._durations) > 64:
                         self._durations.pop(0)
                     self.report.heartbeats += 1
+                    self._m_heartbeats.inc()
                     self.report.steps_done = i + 1
+                    self._m_steps.set(i + 1)
                     if (i + 1) % self.cfg.ckpt_every == 0:
                         self.ckpt.save(i, state)
                 self.ckpt.wait()
@@ -112,6 +132,7 @@ class Supervisor:
             except StepFailure:
                 restarts += 1
                 self.report.restarts = restarts
+                self._m_restarts.inc()
                 if restarts > self.cfg.max_restarts:
                     raise
                 self.ckpt.wait()

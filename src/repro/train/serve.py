@@ -37,6 +37,7 @@ from repro.configs.base import ArchConfig
 from repro.kernels import ops as kops
 from repro.models import cnn as C
 from repro.models import model as M
+from repro.telemetry import MetricsRegistry, Telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +59,10 @@ class ServeRequest:
     submitted_at: float
     result: np.ndarray | None = None
     completed_at: float | None = None
+    # tracer-clock stamp (perf_counter_ns) taken at submit when tracing
+    # is enabled — the queue-wait span's start point.  The serving clock
+    # may be simulated (SimClock), so it cannot anchor trace timestamps.
+    trace_submit_ns: int | None = None
 
     @property
     def latency(self) -> float | None:
@@ -87,25 +92,41 @@ class PackedModelCache:
     weights or re-folds BN thresholds.  ``invalidate(key)`` drops an
     entry when its underlying parameters changed (the ONLY correct
     response to a weight update — packed trees are derived data).
-    ``hits``/``misses`` are observable for tests and benchmarks.
+    Hit/miss/invalidation counts live in a telemetry metrics registry
+    (``serve.cache.*`` — pass the server's via ``metrics=``, or a fresh
+    one is created); ``hits``/``misses`` remain as read-only views.
     """
 
-    def __init__(self):
+    def __init__(self, metrics: MetricsRegistry | None = None):
         self._entries: dict[Any, Any] = {}
-        self.hits = 0
-        self.misses = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._hits = self.metrics.counter("serve.cache.hits")
+        self._misses = self.metrics.counter("serve.cache.misses")
+        self._invalidations = self.metrics.counter(
+            "serve.cache.invalidations")
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
 
     def get_or_pack(self, key, pack_fn: Callable[[], Any]):
         if key in self._entries:
-            self.hits += 1
+            self._hits.inc()
         else:
-            self.misses += 1
+            self._misses.inc()
             self._entries[key] = pack_fn()
         return self._entries[key]
 
     def invalidate(self, key) -> bool:
         """Drop ``key``; True if it was cached."""
-        return self._entries.pop(key, None) is not None
+        dropped = self._entries.pop(key, None) is not None
+        if dropped:
+            self._invalidations.inc()
+        return dropped
 
     def __contains__(self, key) -> bool:
         return key in self._entries
@@ -123,20 +144,33 @@ class ActivationPool:
     allocates nothing per flush.  Inter-stage activations never appear
     here at all: they stay bit-packed on device inside the jitted
     forward (the fused-epilogue contract, ``docs/kernels.md``).
+
+    Buffer accounting lives in a telemetry metrics registry
+    (``serve.pool.allocations`` / ``serve.pool.reuses`` — pass the
+    server's via ``metrics=``); ``allocations`` remains a read-only
+    view.
     """
 
-    def __init__(self):
+    def __init__(self, metrics: MetricsRegistry | None = None):
         self._bufs: dict[tuple, np.ndarray] = {}
-        self.allocations = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._allocations = self.metrics.counter("serve.pool.allocations")
+        self._reuses = self.metrics.counter("serve.pool.reuses")
+
+    @property
+    def allocations(self) -> int:
+        return self._allocations.value
 
     def batch_buffer(self, bucket: int, example_shape: tuple[int, ...],
                      dtype=np.uint8) -> np.ndarray:
         key = (bucket, tuple(example_shape), np.dtype(dtype).str)
         buf = self._bufs.get(key)
         if buf is None:
-            self.allocations += 1
+            self._allocations.inc()
             buf = np.zeros((bucket, *example_shape), dtype)
             self._bufs[key] = buf
+        else:
+            self._reuses.inc()
         return buf
 
 
@@ -193,7 +227,8 @@ class PackedInferenceServer:
                  default_deadline: float = 0.010,
                  max_queue: int | None = None,
                  completed_mailbox: int = 1024,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry: Telemetry | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -206,8 +241,27 @@ class PackedInferenceServer:
         self.default_deadline = default_deadline
         self.max_queue = max_queue
         self._clock = clock
-        self.cache = PackedModelCache()
-        self.pool = ActivationPool()
+        # Per-server telemetry (isolated; tracing off by default — the
+        # disabled span path is one attribute check).  The cache and
+        # pool write their counters into the SAME registry, so one
+        # snapshot carries the whole serve.* taxonomy
+        # (docs/observability.md).
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        m = self.telemetry.metrics
+        self._m_submitted = m.counter("serve.submitted")
+        self._m_completed = m.counter("serve.completed")
+        self._m_cancelled = m.counter("serve.cancelled")
+        self._m_rejected = m.counter("serve.rejected")
+        self._m_flushes = m.counter("serve.flushes")
+        self._m_padded = m.counter("serve.padded_rows")
+        self._m_routes = {r: m.counter(f"serve.route.{r}")
+                          for r in ("gemv", "gemm")}
+        self._m_depth = m.gauge("serve.queue_depth")
+        self._h_latency = m.histogram("serve.request_latency_s")
+        self._h_wait = m.histogram("serve.queue_wait_s")
+        self._h_flush = m.histogram("serve.flush_wall_s")
+        self.cache = PackedModelCache(metrics=m)
+        self.pool = ActivationPool(metrics=m)
         self._engines: dict[Any, _Engine] = {}
         self._active: Any = None
         self._queue: collections.deque[ServeRequest] = collections.deque()
@@ -266,7 +320,8 @@ class PackedInferenceServer:
         if mesh is not None:
             from repro.distributed.sharding import make_sharded_forward
             fwd = make_sharded_forward(packed_tree, mesh, backend=backend,
-                                       dense_stack=dense_stack)
+                                       dense_stack=dense_stack,
+                                       telemetry=self.telemetry)
             batch_multiple = fwd.batch_multiple
         else:
             fwd = C.make_packed_forward(packed_tree, backend=backend,
@@ -332,6 +387,7 @@ class PackedInferenceServer:
         if self._active is None:
             raise RuntimeError("no model registered")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._m_rejected.inc()
             raise RuntimeError(
                 f"queue full ({self.max_queue} pending) — backpressure")
         now = self._clock()
@@ -340,6 +396,12 @@ class PackedInferenceServer:
                            submitted_at=now)
         self._next_rid += 1
         self._queue.append(req)
+        self._m_submitted.inc()
+        self._m_depth.set(len(self._queue))
+        tr = self.telemetry.tracer
+        if tr.enabled:
+            req.trace_submit_ns = tr.now_ns()
+            tr.instant("serve.submit", rid=req.rid)
         return req.rid
 
     def cancel(self, rid: int) -> bool:
@@ -347,6 +409,8 @@ class PackedInferenceServer:
         for r in self._queue:
             if r.rid == rid:
                 self._queue.remove(r)
+                self._m_cancelled.inc()
+                self._m_depth.set(len(self._queue))
                 return True
         return False
 
@@ -431,33 +495,70 @@ class PackedInferenceServer:
         return eng.buckets[-1]
 
     def _flush_window(self, limit: int) -> list[ServeRequest]:
-        reqs = [self._queue.popleft()
-                for _ in range(min(limit, len(self._queue)))]
-        if not reqs:
-            return []
-        eng = self._active_engine()
-        bucket = self._bucket_for(eng, len(reqs))
-        t0 = self._clock()
-        buf = self.pool.batch_buffer(bucket, eng.example_shape)
-        for i, r in enumerate(reqs):
-            buf[i] = np.asarray(r.x, buf.dtype)
-        buf[len(reqs):] = 0
-        out = np.asarray(eng.fwd(buf))      # ONE host round-trip per flush
-        now = self._clock()
-        for i, r in enumerate(reqs):
-            r.result = out[i]
-            r.completed_at = now
-        self.flushes.append(FlushRecord(
-            batch=len(reqs), bucket=bucket,
-            route=kops.dispatch_batch(bucket, eng.kw_words),
-            at=now, wall_s=now - t0))
-        self.served += reqs
-        del self.served[:-self._completed_cap]
-        del self.flushes[:-self._completed_cap]
-        for r in reqs:
-            self._completed[r.rid] = r
-        while len(self._completed) > self._completed_cap:
-            self._completed.popitem(last=False)
+        """One flush: pop a FIFO window, pad to its bucket, run the
+        compiled forward, complete the requests.
+
+        The serving lifecycle is traced per phase when the server's
+        tracer is enabled (span taxonomy in ``docs/observability.md``):
+        a ``serve.flush`` parent wrapping ``serve.bucket_pad`` →
+        ``serve.pack`` → ``serve.dispatch`` (the jitted call returns) →
+        ``serve.compute`` (host transfer blocks on device work) →
+        ``serve.complete``, plus one explicit-time ``serve.queue_wait``
+        span per request (submit → flush start).  Metrics (queue-wait /
+        latency / flush-wall histograms, route + padded-row counters)
+        update unconditionally — they are a few dict ops per flush.
+        """
+        tr = self.telemetry.tracer
+        flush_t0 = tr.now_ns() if tr.enabled else 0
+        with tr.span("serve.bucket_pad"):
+            reqs = [self._queue.popleft()
+                    for _ in range(min(limit, len(self._queue)))]
+            if not reqs:
+                return []
+            eng = self._active_engine()
+            bucket = self._bucket_for(eng, len(reqs))
+            t0 = self._clock()
+            buf = self.pool.batch_buffer(bucket, eng.example_shape)
+        if tr.enabled:
+            for r in reqs:
+                if r.trace_submit_ns is not None:
+                    tr.add_complete("serve.queue_wait", r.trace_submit_ns,
+                                    flush_t0, rid=r.rid)
+        with tr.span("serve.pack", batch=len(reqs), bucket=bucket):
+            for i, r in enumerate(reqs):
+                buf[i] = np.asarray(r.x, buf.dtype)
+            buf[len(reqs):] = 0
+        route = kops.dispatch_batch(bucket, eng.kw_words)
+        with tr.span("serve.dispatch", route=route):
+            out_dev = eng.fwd(buf)          # ONE host round-trip per flush
+        with tr.span("serve.compute"):
+            out = np.asarray(out_dev)       # blocks on device completion
+        with tr.span("serve.complete"):
+            now = self._clock()
+            for i, r in enumerate(reqs):
+                r.result = out[i]
+                r.completed_at = now
+                self._h_wait.observe(max(0.0, t0 - r.submitted_at))
+                self._h_latency.observe(r.latency)
+            self.flushes.append(FlushRecord(
+                batch=len(reqs), bucket=bucket, route=route,
+                at=now, wall_s=now - t0))
+            self._m_flushes.inc()
+            self._m_routes[route].inc()
+            self._m_padded.inc(bucket - len(reqs))
+            self._m_completed.inc(len(reqs))
+            self._m_depth.set(len(self._queue))
+            self._h_flush.observe(now - t0)
+            self.served += reqs
+            del self.served[:-self._completed_cap]
+            del self.flushes[:-self._completed_cap]
+            for r in reqs:
+                self._completed[r.rid] = r
+            while len(self._completed) > self._completed_cap:
+                self._completed.popitem(last=False)
+        if tr.enabled:
+            tr.add_complete("serve.flush", flush_t0, tr.now_ns(),
+                            batch=len(reqs), bucket=bucket, route=route)
         return reqs
 
 
@@ -465,9 +566,20 @@ def latency_percentile(sorted_vals, q: float):
     """Nearest-rank percentile over a pre-sorted latency list — the one
     definition the serving CLI (``launch/serve.py``) and the serving
     benchmark (``benchmarks/serve_latency.py``) both report, so the two
-    cannot drift."""
-    return sorted_vals[min(len(sorted_vals) - 1,
-                           int(len(sorted_vals) * q))]
+    cannot drift.
+
+    Raises ``ValueError`` on an empty sequence (``sorted_vals[-1]`` would
+    silently report the caller's last GC'd value as a latency) and on a
+    ``q`` outside [0, 1] (``q > 1`` used to clamp to the max — a p200
+    typo would masquerade as p100).  A single sample returns that sample
+    for every ``q``.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"percentile q must be in [0, 1], got {q!r}")
+    n = len(sorted_vals)
+    if n == 0:
+        raise ValueError("latency_percentile of an empty sequence")
+    return sorted_vals[min(n - 1, int(n * q))]
 
 
 class SimClock:

@@ -103,6 +103,46 @@ def test_supervisor_straggler_redispatch(tmp_path):
     assert report.stragglers_redispatched >= 1
 
 
+def test_supervisor_metrics_mirror_report(tmp_path):
+    """The telemetry registry is the SupervisorReport's aggregatable
+    twin: restart/straggler/heartbeat counts and the step gauge stay in
+    lock-step with the report through failures and restarts."""
+    from repro.telemetry import MetricsRegistry
+
+    failed = {"done": False}
+
+    def init_state():
+        return {"x": jnp.float32(0.0)}
+
+    def step_fn(state, i):
+        if i == 3 and not failed["done"]:
+            failed["done"] = True
+            raise StepFailure("simulated node loss")
+        return {"x": state["x"] + 1.0}, {}
+
+    m = MetricsRegistry()
+    sup = Supervisor(SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                                      min_deadline_s=10.0),
+                     init_state, step_fn, metrics=m)
+    _, report = sup.run(6)
+    assert report.restarts == 1
+    assert m.value("supervisor.restarts") == report.restarts
+    assert m.value("supervisor.heartbeats") == report.heartbeats
+    assert m.value("supervisor.stragglers_redispatched") == \
+        report.stragglers_redispatched
+    assert m.value("supervisor.steps_done") == report.steps_done == 6
+    # snapshot is the cross-process view: counters survive a merge
+    other = MetricsRegistry()
+    other.merge(m.snapshot())
+    assert other.value("supervisor.heartbeats") == report.heartbeats
+    # default: a supervisor with no shared registry still records
+    sup2 = Supervisor(SupervisorConfig(ckpt_dir=str(tmp_path / "b"),
+                                       ckpt_every=100, min_deadline_s=10.0),
+                      init_state, step_fn)
+    _, r2 = sup2.run(2)
+    assert sup2.metrics.value("supervisor.heartbeats") == r2.heartbeats
+
+
 def test_remesh_plan():
     assert remesh_plan(256, prefer_model=16).shape == (16, 16)
     assert remesh_plan(192, prefer_model=16).shape == (12, 16)
