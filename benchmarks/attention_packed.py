@@ -1,0 +1,145 @@
+"""Packed-vs-float attention: wall time, launch counts, live memory.
+
+The flash-style binary attention kernel's claims, as bench rows:
+
+* wall-clock of the float-sign softmax attention vs the packed jnp
+  oracle vs the Pallas kernel (interpret mode on CPU — TPU semantics,
+  emulated op-by-op);
+* launch counts: one blocked attention launch per (layer, call) and the
+  full packed transformer forward's launch budget;
+* the memory story: the (B, H, Sq, Skv) float score matrix an unfused
+  attention materializes vs the largest live HBM intermediate of the
+  packed attention launch (online softmax keeps the carry in VMEM), and
+  the 32x Q/K operand shrink from channel packing.
+
+    PYTHONPATH=src python -m benchmarks.attention_packed          # CSV + JSON
+    REPRO_BENCH_SMOKE=1 ... python -m benchmarks.attention_packed # CI-sized
+
+Writes ``experiments/BENCH_attention.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.kernels import binary_attention as BA
+from repro.kernels import ops as kops
+from repro.utils.jaxpr import count_pallas_calls, max_intermediate_bytes
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps * 1e6
+
+
+def _float_sign_attention(q, k, v):
+    """The unfused baseline: sign-binarized Q/K, full (Sq, Skv) score
+    matrix in HBM, exact softmax."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", B.sign_pm1(q), B.sign_pm1(k))
+    s = s * q.shape[-1] ** -0.5
+    pos = jnp.arange(q.shape[1])
+    s = jnp.where((pos[:, None] >= pos[None, :])[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+def rows() -> list[tuple]:
+    key = jax.random.PRNGKey(0)
+    out = []
+
+    b, h, d = 1, 4, 64
+    # jnp-path size: the O(S^2) score matrix must dominate the O(S)
+    # padded output even at smoke size, so S >= 256 (Dv pads to 128).
+    s = 256 if SMOKE else 512
+    sp = 32 if SMOKE else 128           # interpret-mode Pallas size
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+
+    # -- wall time ---------------------------------------------------------
+    t_float = _time(jax.jit(_float_sign_attention), q, q, v)
+    out.append((f"attn/float_softmax_s{s}", t_float,
+                "float-sign attention, (Sq,Skv) score matrix in HBM"))
+    t_oracle = _time(
+        jax.jit(lambda a, b_, c: kops.binary_attention(a, b_, c,
+                                                       backend="jnp")),
+        q, q, v)
+    out.append((f"attn/binary_oracle_s{s}", t_oracle,
+                "binary_attention jnp oracle (exact softmax)"))
+    t_pl = _time(lambda a, b_, c: kops.binary_attention(a, b_, c,
+                                                        backend="pallas"),
+                 q[:, :sp], q[:, :sp], v[:, :sp], reps=1)
+    out.append((f"attn/pallas_interpret_s{sp}", t_pl,
+                "TPU kernel semantics validated on CPU (interpret)"))
+
+    # -- launch counts -----------------------------------------------------
+    n = count_pallas_calls(
+        lambda a, b_, c: kops.binary_attention(a, b_, c, backend="pallas"),
+        q, q, v)
+    out.append(("attn/launches_one_call", float(n),
+                "2 bitpack launches + 1 blocked attention launch"))
+
+    from repro.configs import get_config
+    from repro.models import transformer as TF
+    cfg = get_config("gemma2-9b", reduced=True)
+    params = TF.init_binary_lm(jax.random.PRNGKey(1), cfg)
+    packed = TF.pack_transformer(params, cfg, max_len=8)
+    toks = jnp.zeros((1, 8), jnp.uint8)
+    n_tf = count_pallas_calls(
+        lambda t: TF.transformer_forward_packed(packed, t,
+                                                backend="pallas"), toks)
+    out.append((f"attn/transformer_launches_L{cfg.num_layers}", float(n_tf),
+                "full packed LM forward (attention + dense megakernels)"))
+
+    # -- live-memory story -------------------------------------------------
+    score_bytes = b * h * s * s * 4
+    out.append((f"attn/score_matrix_bytes_s{s}", float(score_bytes),
+                "(B,H,Sq,Skv) fp32 — what unfused attention materializes"))
+    un_bytes, un_shape = max_intermediate_bytes(
+        jax.jit(_float_sign_attention), q, q, v)
+    out.append((f"attn/max_live_unfused_s{s}", float(un_bytes),
+                f"largest HBM intermediate, unfused path {list(un_shape)}"))
+    qp = kops.bitpack(q)
+    pk_bytes, pk_shape = max_intermediate_bytes(
+        lambda a, b_, c: BA.binary_attention_packed(
+            a, b_, c, d_true=d, causal=True, interpret=True), qp, qp, v)
+    out.append((f"attn/max_live_packed_s{s}", float(pk_bytes),
+                f"largest HBM intermediate, packed launch {list(pk_shape)} "
+                "(online softmax: no score matrix)"))
+    out.append((f"attn/qk_operand_bytes_float_s{s}",
+                float(2 * b * s * h * d * 4), "fp32 Q+K"))
+    out.append((f"attn/qk_operand_bytes_packed_s{s}",
+                float(2 * b * s * h * (d // 32) * 4),
+                "channel-packed uint32 Q+K (32x)"))
+    return out
+
+
+def write_bench_json(rs: list[tuple],
+                     path="experiments/BENCH_attention.json") -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = [{"name": n, "value": v, "note": note} for n, v, note in rs]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def main() -> None:
+    rs = rows()
+    for name, us, note in rs:
+        print(f"{name},{us:.1f},{note}")
+    write_bench_json(rs)
+    print("wrote experiments/BENCH_attention.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro import telemetry
 from repro.core import binarize as B
+from repro.kernels import binary_attention as _batt
 from repro.kernels import binary_conv as _bconv
 from repro.kernels import binary_matmul as _bmm
 from repro.kernels import bitpack as _bp
@@ -229,6 +230,53 @@ def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
             h, s["w_packed"], s["tau"], s["flip"], k_true=s["k_true"],
             words_per_step=ws, interpret=not _on_tpu())
     return h
+
+
+def binary_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, window: int | None = None,
+                     attn_softcap: float | None = None, q_offset: int = 0,
+                     backend: str = "auto", block_q: int | None = None,
+                     block_kv: int | None = None,
+                     words_per_step: int | None = None) -> jax.Array:
+    """Flash-style blocked binary attention (``kernels/binary_attention``).
+
+    ``q``: (B, Sq, Hq, D), ``k``: (B, Skv, Hkv, D), ``v``:
+    (B, Skv, Hkv, Dv) — all real-valued.  Q and K are sign-binarized and
+    packed along head_dim through the :func:`bitpack` dispatcher; every
+    QKᵀ score is then the XNOR-popcount identity
+    (D − 2·popcount) · D^(−1/2), softmaxed online over KV tiles (the
+    (Sq, Skv) score matrix never hits HBM on the pallas backend), and
+    averaged against the float V.  ``Hq % Hkv == 0`` groups query heads
+    over KV heads (GQA/MQA).  ``causal`` masks qpos < kpos (``q_offset``
+    aligns decode queries), ``window`` masks qpos − kpos ≥ window
+    (sliding-window local layers), ``attn_softcap`` applies the logit
+    tanh cap before masking.  Returns (B, Sq, Hq, Dv) float32.
+
+    backend: 'pallas' | 'jnp' | 'ref' | 'auto' ('jnp'/'ref' both run
+    ``ref.binary_attention_ref``, the exact-softmax oracle); unknown
+    strings raise ``ValueError``.  Block knobs (pallas only) validate by
+    raising, like ``block_oh``/``block_n``/``words_per_step`` everywhere
+    else: ``block_q`` must be a positive multiple of 8 (sublanes),
+    ``block_kv`` a positive multiple of 128 (lanes), ``words_per_step``
+    a positive divisor of 128.  The output is invariant to all three
+    (property-tested).  ``window`` must be a positive int on every
+    backend.
+    """
+    if window is not None and window < 1:
+        raise ValueError(f"window must be a positive int, got {window!r}")
+    backend = _resolve(backend)
+    if backend != "pallas":
+        return _ref.binary_attention_ref(
+            q, k, v, causal=causal, window=window,
+            attn_softcap=attn_softcap, q_offset=q_offset)
+    d = q.shape[-1]
+    q_p = bitpack(q, backend=backend)
+    k_p = bitpack(k, backend=backend)
+    return _batt.binary_attention_packed(
+        q_p, k_p, v, d_true=d, causal=causal, window=window,
+        attn_softcap=attn_softcap, q_offset=q_offset, block_q=block_q,
+        block_kv=block_kv, words_per_step=_words_per_step(words_per_step),
+        interpret=not _on_tpu())
 
 
 def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:

@@ -155,3 +155,43 @@ def binary_conv2d_bn_sign_packed_ref(x_packed: jax.Array,
                                  kw=kw, stride=stride, pads=pads,
                                  c_out=c_out, k_true=k_true)
     return bn_sign_pack_ref(y, tau, flip)
+
+
+def binary_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int | None = None,
+                         attn_softcap: float | None = None,
+                         q_offset: int = 0) -> jax.Array:
+    """Reference binary attention (the ``binary_attention`` oracle).
+
+    ``q``: (B, Sq, Hq, D), ``k``: (B, Skv, Hkv, D), ``v``:
+    (B, Skv, Hkv, Dv) — real-valued.  Q and K are sign-binarized to ±1
+    (so q·k == D − 2·mismatches, the XNOR-popcount identity the kernel
+    computes on packed words), scaled by D^(−1/2), optionally
+    soft-capped, masked (causal keeps qpos ≥ kpos with ``q_offset``
+    aligning decode queries; ``window`` keeps qpos − kpos < window),
+    softmaxed *exactly* (one pass, not the online recurrence), and
+    averaged against the real-valued V.  GQA: query head h attends KV
+    head h // (Hq // Hkv).  Returns (B, Sq, Hq, Dv) float32 — the
+    kernel matches to float tolerance (the integer score path is
+    bit-exact; only the softmax association order differs).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    assert hkv >= 1 and hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qb = B.sign_pm1(q.astype(jnp.float32))
+    kb = jnp.repeat(B.sign_pm1(k.astype(jnp.float32)), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb) * jnp.float32(d) ** -0.5
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)

@@ -235,7 +235,18 @@ def attention_decode(params: dict, cfg: ArchConfig, x: jax.Array,
 
     position being generated.  Local layers use a ring buffer of
     ``window_size`` slots (slot = pos % window); global layers index the
-    full cache.  Returns (y, new_cache)."""
+    full cache.  Returns (y, new_cache).
+
+    ``cross_kv`` is not supported here: self-attention decode and
+    cross-attention are separate modules, and silently ignoring the
+    argument used to make whisper-style callers decode *without* their
+    encoder context.  Raises ``NotImplementedError`` instead — use
+    :func:`cross_attention_decode` for the encoder K/V read."""
+    if cross_kv is not None:
+        raise NotImplementedError(
+            "attention_decode does not consume cross_kv; call "
+            "cross_attention_decode with the precomputed encoder K/V "
+            "(see models/encdec.py) instead of passing it here")
     b = x.shape[0]
     q, k, v = _project_qkv(params, cfg, x)            # (B,1,H*,D)
     pos = jnp.full((b, 1), idx, jnp.int32)
@@ -269,15 +280,17 @@ def attention_decode(params: dict, cfg: ArchConfig, x: jax.Array,
     j = jnp.arange(size)
     if kind == "local":
         # absolute position stored in slot j (ring): largest p <= idx with
-        # p % size == j
+        # p % size == j.  The validity window is bounded by the ACTUAL
+        # ring size — init_attn_cache allocates min(max_len, window_size)
+        # slots, so when max_len < window_size a mask built from
+        # cfg.window_size would admit slots the ring never held.
         abs_pos = idx - ((idx - j) % size)
-        valid = (abs_pos >= 0) & (abs_pos >= idx - cfg.window_size + 1)
+        window = min(cfg.window_size, size)
+        valid = (abs_pos >= 0) & (abs_pos >= idx - window + 1)
     else:
         valid = j <= idx
 
     y = _decode_score(q, ck, cv, valid, cfg)
-    if cross_kv is not None:
-        pass  # handled by caller (whisper decoder has a separate module)
     out = LN.apply_linear(params["wo"], y.reshape(b, 1, -1), cfg.quant,
                           dtype=cfg.activation_dtype)
     return out, new_cache

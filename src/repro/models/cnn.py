@@ -393,31 +393,40 @@ def bcnn_forward_packed(packed: dict, x_uint8: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def packed_kind(packed: dict) -> str:
-    """'bcnn' | 'bmlp' from the shape of a ``pack_*`` tree.
+    """'bcnn' | 'bmlp' | 'transformer' from the shape of a ``pack_*`` tree.
 
     The serving layer and the sharding rules both dispatch on this, so
     the check lives once, next to the pack functions whose layout it
-    reads.  Raises ``ValueError`` for anything else.
+    reads ('transformer' trees come from
+    ``models.transformer.pack_transformer`` and carry a ``blocks`` list).
+    Raises ``ValueError`` for anything else.
     """
     if "convs" in packed:
         return "bcnn"
+    if "blocks" in packed:
+        return "transformer"
     if "layers" in packed:
         return "bmlp"
     raise ValueError(
-        f"not a pack_bcnn/pack_bmlp tree: keys {sorted(packed)}")
+        f"not a pack_bcnn/pack_bmlp/pack_transformer tree: "
+        f"keys {sorted(packed)}")
 
 
 def packed_input_shape(packed: dict) -> tuple[int, ...]:
     """Per-example input shape (no batch axis) a packed forward consumes.
 
-    bcnn: ``(H, W, C_in)`` raw uint8; bmlp: ``(K,)`` raw uint8 — both
-    networks take fixed-precision input (the bit-plane first layer,
-    paper C4), so the serving scratch pool can stage requests without
-    knowing which network is behind the queue.
+    bcnn: ``(H, W, C_in)`` raw uint8; bmlp: ``(K,)`` raw uint8;
+    transformer: ``(S,)`` uint8 token ids (reduced registry configs have
+    vocab ≤ 256) — every workload takes fixed-precision input, so the
+    serving scratch pool can stage requests without knowing which
+    network is behind the queue.
     """
-    if packed_kind(packed) == "bcnn":
+    kind = packed_kind(packed)
+    if kind == "bcnn":
         spec: BCNNSpec = packed["spec"]
         return (*spec.input_hw, spec.c_in)
+    if kind == "transformer":
+        return (int(packed["meta"]["seq_len"]),)
     return (int(packed["layers"][0]["k_true"]),)
 
 
@@ -429,8 +438,13 @@ def packed_dense_kw_words(packed: dict) -> int:
     fits the resident activation block, so the widest layer decides
     the route for the whole forward.
     """
-    layers = (packed["denses"] if packed_kind(packed) == "bcnn"
-              else packed["layers"])
+    kind = packed_kind(packed)
+    if kind == "transformer":
+        mats = [blk[w] for blk in packed["blocks"]
+                for w in ("wq", "wk", "wv", "wo", "w1", "w2")]
+        mats.append(packed["head"])
+        return max(int(p["w_packed"].shape[1]) for p in mats)
+    layers = packed["denses"] if kind == "bcnn" else packed["layers"]
     return max(int(p["w_packed"].shape[1]) for p in layers)
 
 
@@ -466,10 +480,18 @@ def make_packed_forward(packed: dict, *, backend: str = "auto",
     ``dense_stack`` validate as in the underlying forward (unknown
     values raise at first call).
     """
-    if packed_kind(packed) == "bcnn":
+    kind = packed_kind(packed)
+    if kind == "bcnn":
         def fwd(x):
             return bcnn_forward_packed(packed, x, backend=backend,
                                        dense_stack=dense_stack)
+    elif kind == "transformer":
+        from repro.models import transformer as TF
+
+        def fwd(x):
+            return TF.transformer_forward_packed(packed, x,
+                                                 backend=backend,
+                                                 dense_stack=dense_stack)
     else:
         def fwd(x):
             return bmlp_forward_packed(packed, x, backend=backend,

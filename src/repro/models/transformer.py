@@ -260,3 +260,160 @@ def stack_prefill(stack: list, cfg: ArchConfig, x: jax.Array,
         x, seg_cache = xscan(group_body, x, seg_params)
         cache_all.append(seg_cache)
     return x, cache_all
+
+
+# ---------------------------------------------------------------------------
+# packed binary-LM forward (the XNOR-popcount serving workload)
+# ---------------------------------------------------------------------------
+#
+# The Espresso treatment applied to the decoder stack: every projection
+# (Q/K/V/O, FFN up/down, LM head) is a sign-binarized XNOR-popcount GEMM
+# over 32-per-word packed operands, the FFN up-projection keeps the fused
+# BN-sign-repack epilogue (its int32 activation never leaves the kernel),
+# and attention runs through the flash-style blocked binary kernel
+# (``kernels.ops.binary_attention``) — no (Sq, Skv) score matrix in HBM.
+# The residual stream and the embedding table stay float (the "frontend
+# stays fixed-precision" convention, mirroring the BCNN bit-plane first
+# layer); norms are dropped because every projection input is immediately
+# sign-binarized, which is scale-invariant.
+#
+# Layer kinds map as: 'global' -> causal attention, 'local' -> causal
+# sliding-window attention (cfg.window_size); 'rec'/'ssm' layers are
+# *served* as sliding-window attention too — the binary analogue of their
+# bounded-state recurrence — so every registry config has a packed
+# serving form (documented in docs/architecture.md).
+
+from repro.core import binary_layers as L          # noqa: E402
+from repro.kernels import ops as kops              # noqa: E402
+
+
+def _lm_d_ff(cfg: ArchConfig) -> int:
+    if cfg.d_ff > 0:
+        return cfg.d_ff
+    if cfg.moe is not None:
+        return cfg.moe.d_ff_expert
+    return cfg.d_model
+
+
+def init_binary_lm(key: jax.Array, cfg: ArchConfig) -> dict:
+    """Float weights for :func:`pack_transformer` (one matrix per
+    projection, (out, in) layout like every packed GEMM operand)."""
+    d, hq, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.head_dim)
+    f = _lm_d_ff(cfg)
+    ks = iter(jax.random.split(key, 2 + 6 * cfg.num_layers))
+
+    def mat(k, n, m):
+        return jax.random.normal(k, (n, m), jnp.float32)
+
+    blocks = []
+    for _ in range(cfg.num_layers):
+        blocks.append({
+            "wq": mat(next(ks), hq * hd, d),
+            "wk": mat(next(ks), hkv * hd, d),
+            "wv": mat(next(ks), hkv * hd, d),
+            "wo": mat(next(ks), d, hq * hd),
+            "w1": mat(next(ks), f, d),
+            "bn1": L.init_batchnorm(f),
+            "w2": mat(next(ks), d, f),
+        })
+    return {"embed": jax.random.normal(next(ks),
+                                       (cfg.vocab_size, d), jnp.float32),
+            "head": mat(next(ks), cfg.vocab_size, d),
+            "blocks": blocks}
+
+
+def pack_transformer(params: dict, cfg: ArchConfig, *,
+                     max_len: int = 16) -> dict:
+    """One-time weight packing for the binary-LM serving forward.
+
+    Returns the ``packed_kind == 'transformer'`` tree: per-layer packed
+    projections (uint32 words, zero-bit tails), the folded BN-sign
+    threshold for the fused FFN up-projection, the float embedding
+    table, and a ``meta`` dict of the static shapes/mask knobs the
+    forward needs (``seq_len`` fixes the serving example shape).
+    """
+    d, hq, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.head_dim)
+    f = _lm_d_ff(cfg)
+    kinds = tuple(cfg.layer_kind(i) for i in range(cfg.num_layers))
+    blocks = []
+    for lp in params["blocks"]:
+        blocks.append({
+            "wq": L.pack_binary_dense({"w": lp["wq"]}),
+            "wk": L.pack_binary_dense({"w": lp["wk"]}),
+            "wv": L.pack_binary_dense({"w": lp["wv"]}),
+            "wo": L.pack_binary_dense({"w": lp["wo"]}),
+            "w1": L.pack_binary_dense({"w": lp["w1"]}),
+            "fold1": L.fold_bn_sign(lp["bn1"]),
+            "w2": L.pack_binary_dense({"w": lp["w2"]}),
+        })
+    return {"blocks": blocks,
+            "embed": params["embed"].astype(jnp.float32),
+            "head": L.pack_binary_dense({"w": params["head"]}),
+            "meta": {"name": cfg.name, "d_model": d, "num_heads": hq,
+                     "num_kv_heads": hkv, "head_dim": hd, "d_ff": f,
+                     "vocab_size": cfg.vocab_size, "seq_len": max_len,
+                     "window_size": cfg.window_size,
+                     "attn_softcap": cfg.attn_softcap, "kinds": kinds}}
+
+
+def transformer_forward_packed(packed: dict, tokens: jax.Array, *,
+                               backend: str = "auto",
+                               dense_stack: str = "auto") -> jax.Array:
+    """Packed binary-LM forward: ``tokens`` (B, S) integer ids (uint8
+    from the serving pool is fine) -> last-token logits (B, vocab)
+    float32.
+
+    Every projection routes through the dense megakernel dispatchers
+    (``binary_matmul_packed`` / ``binary_matmul_bn_sign_packed`` — the
+    batch takes the GEMV or GEMM grid per ``kernels.ops.dispatch_batch``)
+    and attention through ``binary_attention``; on the pallas backend
+    that is the full XNOR-popcount serving path.  ``dense_stack`` is
+    accepted for signature parity with the bcnn/bmlp forwards (the
+    per-layer FFN is a single fused stage, so there is no stack to make
+    resident); it validates like everywhere else.
+    """
+    if dense_stack not in ("auto", "resident", "layered"):
+        raise ValueError(f"unknown dense_stack {dense_stack!r}")
+    meta = packed["meta"]
+    d, hq, hkv, hd, f = (meta["d_model"], meta["num_heads"],
+                         meta["num_kv_heads"], meta["head_dim"],
+                         meta["d_ff"])
+    b, s = tokens.shape
+    x = packed["embed"][tokens.astype(jnp.int32)]        # (B, S, D) f32
+
+    for blk, kind in zip(packed["blocks"], meta["kinds"]):
+        window = None if kind == "global" else meta["window_size"]
+        xp = kops.bitpack(x.reshape(b * s, d), backend=backend)
+        q = kops.binary_matmul_packed(xp, blk["wq"]["w_packed"],
+                                      k_true=d, backend=backend)
+        k = kops.binary_matmul_packed(xp, blk["wk"]["w_packed"],
+                                      k_true=d, backend=backend)
+        v = kops.binary_matmul_packed(xp, blk["wv"]["w_packed"],
+                                      k_true=d, backend=backend)
+        attn = kops.binary_attention(
+            q.reshape(b, s, hq, hd).astype(jnp.float32),
+            k.reshape(b, s, hkv, hd).astype(jnp.float32),
+            v.reshape(b, s, hkv, hd).astype(jnp.float32) * (1.0 / d),
+            causal=True, window=window, attn_softcap=meta["attn_softcap"],
+            backend=backend)
+        ap = kops.bitpack(attn.reshape(b * s, hq * hd), backend=backend)
+        o = kops.binary_matmul_packed(ap, blk["wo"]["w_packed"],
+                                      k_true=hq * hd, backend=backend)
+        x = x + o.reshape(b, s, d).astype(jnp.float32) * (1.0 / (hq * hd))
+        # FFN: fused up-projection (GEMM + folded-BN sign + re-bitpack —
+        # the int32 (B*S, d_ff) activation never leaves the kernel),
+        # then the packed down-projection on the packed activation.
+        hp = kops.bitpack(x.reshape(b * s, d), backend=backend)
+        h1 = kops.binary_matmul_bn_sign_packed(
+            hp, blk["w1"]["w_packed"], blk["fold1"]["tau"],
+            blk["fold1"]["flip"], k_true=d, backend=backend)
+        y = kops.binary_matmul_packed(h1, blk["w2"]["w_packed"],
+                                      k_true=f, backend=backend)
+        x = x + y.reshape(b, s, d).astype(jnp.float32) * (1.0 / f)
+
+    lp = kops.bitpack(x[:, -1], backend=backend)         # (B, Dw)
+    logits = kops.binary_matmul_packed(lp, packed["head"]["w_packed"],
+                                       k_true=d, backend=backend)
+    return logits.astype(jnp.float32)

@@ -118,21 +118,32 @@ def probe_sharded(packed, batch: int, *,
 def _demo_packed(kind: str):
     from repro.models import cnn
 
+    if kind == "transformer":
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import transformer as TF
+
+        cfg = get_config("gemma2-9b", reduced=True)
+        params = TF.init_binary_lm(jax.random.PRNGKey(0), cfg)
+        return TF.pack_transformer(params, cfg, max_len=8)
     params, spec, kind = cnn.demo_model(kind, smoke=True)
     pack = cnn.pack_bcnn if kind == "bcnn" else cnn.pack_bmlp
     return pack(params, spec)
 
 
 def standard_report(*, sharded: bool = True) -> dict:
-    """The committed probe cells: both demo networks at the GEMV (≤ 8)
-    and GEMM (> 8) serving batches, plus the (4, 2)-mesh collective
-    cells.  Keys are stable — they ARE the baseline diff surface."""
+    """The committed probe cells: both demo networks and the reduced
+    gemma2 binary LM at the GEMV (≤ 8) and GEMM (> 8) serving batches,
+    plus the (4, 2)-mesh collective cells (bmlp/bcnn only — the
+    sharding rules don't cover the transformer workload).  Keys are
+    stable — they ARE the baseline diff surface."""
     cells = {}
-    for kind in ("bmlp", "bcnn"):
+    for kind in ("bmlp", "bcnn", "transformer"):
         packed = _demo_packed(kind)
         for batch in (1, 8, 32):
             cells[f"{kind}/b{batch}"] = probe_forward(packed, batch)
-        if sharded:
+        if sharded and kind != "transformer":
             cells[f"sharded/{kind}_{SHARDED_MESH[0]}x{SHARDED_MESH[1]}"] = \
                 probe_sharded(packed, batch=8)
     return {"schema": 1, "cells": cells}

@@ -287,8 +287,10 @@ class PackedInferenceServer:
         server is idle.
 
         Either pass float ``params`` + ``spec`` (+ ``kind`` 'bcnn' |
-        'bmlp') — the weight cache packs + folds ONCE per key — or a
-        pre-``pack_*`` tree via ``packed=``.  Re-registering a known key
+        'bmlp' | 'transformer'; for 'transformer' ``spec`` is the
+        ``ArchConfig`` and ``params`` come from
+        ``models.transformer.init_binary_lm``) — the weight cache packs
+        + folds ONCE per key — or a pre-``pack_*`` tree via ``packed=``.  Re-registering a known key
         is a cache hit: neither the packed tree nor the compiled
         forwards are rebuilt.  ``mesh`` puts a ``(data, model)`` device
         mesh behind the queue (``make_sharded_forward``); flush buckets
@@ -310,13 +312,22 @@ class PackedInferenceServer:
         if packed is not None:
             packed_tree = self.cache.get_or_pack(key, lambda: packed)
         else:
-            if kind not in ("bcnn", "bmlp"):
+            if kind not in ("bcnn", "bmlp", "transformer"):
                 raise ValueError(
-                    f"kind must be 'bcnn' or 'bmlp', got {kind!r}")
-            pack = C.pack_bcnn if kind == "bcnn" else C.pack_bmlp
+                    f"kind must be 'bcnn', 'bmlp', or 'transformer', "
+                    f"got {kind!r}")
+            if kind == "transformer":
+                from repro.models import transformer as TF
+                pack = TF.pack_transformer
+            else:
+                pack = C.pack_bcnn if kind == "bcnn" else C.pack_bmlp
             packed_tree = self.cache.get_or_pack(
                 key, lambda: pack(params, spec))
         kind = C.packed_kind(packed_tree)
+        if kind == "transformer" and mesh is not None:
+            raise ValueError(
+                "mesh serving is not supported for the transformer "
+                "workload (the sharding rules cover bcnn/bmlp)")
         if mesh is not None:
             from repro.distributed.sharding import make_sharded_forward
             fwd = make_sharded_forward(packed_tree, mesh, backend=backend,

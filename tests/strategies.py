@@ -105,5 +105,41 @@ def dense_stack_widths() -> "st.SearchStrategy":
     return st.sampled_from(((64,), (48, 64), (33, 96, 40), (100, 64, 32)))
 
 
+AttnCase = namedtuple("AttnCase", "batch sq skv hkv group d causal window")
+
+
+def attention_cases() -> "st.SearchStrategy":
+    """(B, Sq, Skv, Hkv, group, head_dim, causal, window) attention
+    geometries for the binary-attention kernel suite.
+
+    Ragged on every axis the kernel pads: Sq off the 8-sublane grid,
+    Skv off the 128-lane grid, head_dim sub-word (8, 16), exact-word
+    (32, 64) and multi-word ragged (33 — the zero-bit-tail path),
+    Hq = Hkv·group covering MHA (group 1), GQA and MQA (Hkv 1).
+    Sliding-window cases keep Skv ≥ Sq so no query row is fully masked
+    (queries align to the sequence end via q_offset = Skv − Sq; a row
+    with zero valid keys has no defined softmax and the oracle/kernel
+    padding conventions legitimately differ there).
+    """
+    return st.tuples(
+        st.sampled_from((1, 1, 2)),               # batch (batch-1 biased)
+        st.sampled_from((1, 3, 5, 9, 17)),        # Sq (off-sublane)
+        st.sampled_from((1, 4, 9, 16, 21)),       # Skv (off-lane)
+        st.sampled_from((1, 2, 3)),               # Hkv
+        st.sampled_from((1, 1, 2, 4)),            # group (Hq = Hkv*group)
+        st.sampled_from((8, 16, 32, 33, 64)),     # head_dim
+        st.booleans(),                            # causal
+        st.sampled_from((None, None, 3, 7)),      # sliding window
+    ).map(lambda t: AttnCase(*t)).filter(
+        lambda c: c.window is None or c.skv >= c.sq)
+
+
+def attention_blocks() -> "st.SearchStrategy":
+    """(block_q, block_kv) knob choices — None (auto) plus minimum and
+    multi-tile sizes; the kernel output must be invariant to all."""
+    return st.sampled_from(
+        ((None, None), (8, 128), (16, 128), (8, 256), (128, 128)))
+
+
 def seeds() -> "st.SearchStrategy":
     return st.integers(0, 2**31 - 1)

@@ -92,6 +92,71 @@ def test_int8_kv_cache_decode(arch):
             np.asarray(full[:, S + t]), rtol=0.15, atol=0.15)
 
 
+def test_local_decode_matches_chunked_attention_across_wrap():
+    """Module-level local attention: per-token ``attention_decode``
+    through the ring buffer equals ``attention_forward`` (the
+    ``chunked_attention`` full-sequence path) for every position of a
+    sequence three windows long — the ring wraps twice."""
+    from repro.models import attention as A
+    cfg = get_config("gemma2-9b", reduced=True)          # window 8
+    key = jax.random.PRNGKey(7)
+    params = A.init_attention(key, cfg)
+    B, total = 2, 24
+    assert total > 2 * cfg.window_size
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, total, cfg.d_model), jnp.bfloat16)
+    positions = jnp.arange(total)[None, :].repeat(B, axis=0)
+    full = A.attention_forward(params, cfg, x, positions=positions,
+                               kind="local").astype(jnp.float32)
+    cache = A.init_attn_cache(cfg, B, total, kind="local")
+    for t in range(total):
+        y, cache = A.attention_decode(params, cfg, x[:, t:t + 1], cache,
+                                      jnp.int32(t), kind="local")
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0].astype(jnp.float32)),
+            np.asarray(full[:, t]), rtol=2e-2, atol=2e-2)
+
+
+def test_local_ring_smaller_than_window():
+    """Regression: the local validity mask must come from the ACTUAL
+    ring size min(max_len, window_size), not cfg.window_size — a cache
+    allocated for max_len < window used to consult the wrong extent."""
+    from repro.models import attention as A
+    cfg = get_config("gemma2-9b", reduced=True)          # window 8
+    key = jax.random.PRNGKey(8)
+    params = A.init_attention(key, cfg)
+    B, total = 2, 6
+    assert total < cfg.window_size
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, total, cfg.d_model), jnp.bfloat16)
+    positions = jnp.arange(total)[None, :].repeat(B, axis=0)
+    full = A.attention_forward(params, cfg, x, positions=positions,
+                               kind="local").astype(jnp.float32)
+    cache = A.init_attn_cache(cfg, B, total, kind="local")
+    assert cache["k"].shape[1] == total               # ring < window
+    for t in range(total):
+        y, cache = A.attention_decode(params, cfg, x[:, t:t + 1], cache,
+                                      jnp.int32(t), kind="local")
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0].astype(jnp.float32)),
+            np.asarray(full[:, t]), rtol=2e-2, atol=2e-2)
+
+
+def test_attention_decode_rejects_cross_kv():
+    """Regression: ``cross_kv`` used to be silently ignored (dead
+    ``pass`` branch) — now it's a loud NotImplementedError pointing at
+    ``cross_attention_decode``."""
+    from repro.models import attention as A
+    cfg = get_config("gemma2-9b", reduced=True)
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    cache = A.init_attn_cache(cfg, 1, 4)
+    x = jnp.zeros((1, 1, cfg.d_model), jnp.bfloat16)
+    fake_kv = (jnp.zeros((1, 4, cfg.num_kv_heads, cfg.head_dim)),) * 2
+    with pytest.raises(NotImplementedError, match="cross_attention_decode"):
+        A.attention_decode(params, cfg, x, cache, jnp.int32(0),
+                           cross_kv=fake_kv)
+
+
 def test_whisper_decode_matches_teacher_forcing():
     cfg = get_config("whisper-base", reduced=True)
     key = jax.random.PRNGKey(4)
