@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import binarize as B
 from repro.kernels import binary_attention as BA
 from repro.kernels import ops as kops
-from repro.utils.jaxpr import count_pallas_calls, max_intermediate_bytes
+from repro.analysis import count_pallas_calls, max_intermediate_bytes
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core import binary_layers as L
 from repro.kernels import ops as kops
 from repro.models import cnn
-from repro.utils.jaxpr import count_pallas_calls, max_intermediate_bytes
+from repro.analysis import count_pallas_calls, max_intermediate_bytes
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
@@ -40,9 +40,9 @@ def _time(fn, *args, reps=3):
 
 
 # Largest-intermediate evidence ("the Pallas conv path never stages the
-# (B·H'·W', KH·KW·Cw) patch matrix") now comes from the shared walker in
-# utils/jaxpr.py — the same traversal the launch counts and the
-# telemetry probes use.
+# (B·H'·W', KH·KW·Cw) patch matrix") comes from the shared traversal
+# in repro.analysis (analysis/graph.py) — the same walker behind the
+# launch counts, the telemetry probes, and the packedness pass.
 _max_intermediate_bytes = max_intermediate_bytes
 
 

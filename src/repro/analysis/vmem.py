@@ -1,0 +1,384 @@
+"""VMEM preflight pass: static per-launch VMEM estimation from block
+shapes, grids, and dtypes — BEFORE any tracing or compilation.
+
+A Pallas launch that oversubscribes the ~16 MB/core VMEM fails deep
+inside Mosaic (or silently thrashes in interpret mode); the only
+guard the repo had was ``dense_stack_fits_vmem``'s hand-rolled budget
+arithmetic for ONE kernel family.  This pass generalizes it:
+
+* **Closed-form estimators** (``gemm_estimate``, ``conv_estimate``,
+  ``attention_estimate``, ``dense_stack_estimate``, ...) mirror each
+  wrapper's own block-resolution math, so ``kernels/ops.py`` can
+  :func:`preflight` a launch from shapes + knobs alone — at Python
+  call time, before ``jax.jit`` ever traces.  An over-budget launch
+  raises :class:`VmemBudgetError` with the per-term breakdown.  These
+  estimators are also the static cost model the ROADMAP autotuner
+  consumes (score = estimate.total, feasibility = estimate.fits()).
+* **Traced estimator** (:func:`estimate_eqn` / :func:`estimate_forward`)
+  reads a traced ``pallas_call``'s ``grid_mapping`` (block shapes,
+  array dtypes, scratch avals) — the ground-truth view the merged
+  analysis report records per launch and CI drift-gates.
+
+Accounting model (matches the old ``dense_stack_vmem_bytes``): a
+BlockSpec whose block covers its whole array is DMA'd once and held
+resident (1 buffer); a genuinely tiled block is double-buffered by the
+pipeline emitter (2 buffers).  Scratch is a single allocation.  The
+closed-form estimators additionally charge the kernel's compute
+transient (the (bm, bn, ws) popcount broadcast + the pre-pack int32
+tile), which the traced view cannot see.
+
+Budget: 16 MiB/core by default; override with the environment knob
+``REPRO_VMEM_BUDGET_BYTES`` (e.g. to model a smaller core or leave
+explicit headroom).  The single-launch dense stack keeps its own
+tighter 8 MiB gate (``kernels.binary_matmul.STACK_VMEM_BUDGET``) —
+residency there is a routing *choice* with a jnp fallback, not an
+error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Sequence
+
+from repro.analysis import graph
+
+# TPU tile granularity + packing word width (kept in sync with
+# core.binarize.WORD_BITS and the kernels' own module constants; pure
+# ints here so this module never imports jax at module level for the
+# closed-form path).
+SUBLANE = 8
+LANE = 128
+WORD_BITS = 32
+
+# GEMV routing bound (kernels.binary_matmul._GEMV_MAX_KW).
+GEMV_MAX_KW = 4096
+
+DEFAULT_VMEM_BUDGET = 16 * 2**20
+
+
+def vmem_budget() -> int:
+    """The per-core VMEM budget preflight enforces (env-overridable)."""
+    env = os.environ.get("REPRO_VMEM_BUDGET_BYTES")
+    return int(env) if env else DEFAULT_VMEM_BUDGET
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Estimate model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VmemTerm:
+    """One VMEM resident: a staged operand block, scratch, or transient.
+
+    ``bytes`` is per buffer; ``buffers`` is 2 for pipeline-streamed
+    blocks (double-buffered), 1 for pinned/resident blocks, scratch,
+    and compute transients.
+    """
+    name: str
+    bytes: int
+    buffers: int = 1
+
+    @property
+    def total(self) -> int:
+        return self.bytes * self.buffers
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchEstimate:
+    """Static VMEM estimate for one pallas launch."""
+    kernel: str
+    grid: tuple[int, ...]
+    terms: tuple[VmemTerm, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(t.total for t in self.terms)
+
+    def fits(self, budget: int | None = None) -> bool:
+        return self.total <= (vmem_budget() if budget is None else budget)
+
+    def breakdown(self) -> str:
+        lines = [f"{self.kernel} grid={self.grid}: "
+                 f"{self.total} B estimated VMEM"]
+        for t in sorted(self.terms, key=lambda t: -t.total):
+            tag = f" x{t.buffers}" if t.buffers != 1 else ""
+            lines.append(f"  {t.name}: {t.bytes} B{tag} = {t.total} B")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "kernel": self.kernel,
+            "grid": list(self.grid),
+            "bytes": self.total,
+            "fits": self.fits(),
+            "terms": {t.name: t.total for t in self.terms},
+        }
+
+
+class VmemBudgetError(ValueError):
+    """A launch's static VMEM estimate exceeds the per-core budget."""
+
+    def __init__(self, estimate: LaunchEstimate, budget: int):
+        self.estimate = estimate
+        self.budget = budget
+        super().__init__(
+            f"launch would need ~{estimate.total} B VMEM, over the "
+            f"{budget} B budget (REPRO_VMEM_BUDGET_BYTES to override).\n"
+            f"{estimate.breakdown()}\n"
+            "Shrink the block knobs (block_m/block_n/block_kw/...) or "
+            "raise the budget.")
+
+
+def preflight(estimate: LaunchEstimate,
+              budget: int | None = None) -> LaunchEstimate:
+    """Raise :class:`VmemBudgetError` if ``estimate`` oversubscribes
+    VMEM; return it unchanged otherwise (so call sites can chain)."""
+    budget = vmem_budget() if budget is None else budget
+    if estimate.total > budget:
+        raise VmemBudgetError(estimate, budget)
+    return estimate
+
+
+# ---------------------------------------------------------------------------
+# Closed-form estimators (pre-trace; mirror each wrapper's block math)
+# ---------------------------------------------------------------------------
+
+def gemm_estimate(m: int, n: int, kw: int, *, block_m: int = 128,
+                  block_n: int = 128, block_kw: int = 128,
+                  words_per_step: int = 8,
+                  fused: bool = False) -> LaunchEstimate:
+    """Estimate the packed GEMM / GEMV launch of
+    ``kernels.binary_matmul`` for (M, Kw) x (N, Kw) packed operands.
+
+    Reproduces ``_resolve_blocks``'s trimming and the GEMV-vs-GEMM
+    routing, so the estimate tracks the grid the wrapper actually
+    emits.  ``fused=True`` adds the BN tau/flip rows and the packed
+    output (the ``*_bn_sign_packed`` variants).
+    """
+    if m <= SUBLANE:
+        block_m = SUBLANE
+    block_m = min(block_m, _ceil_mult(m, SUBLANE))
+    block_n = min(block_n, _ceil_mult(n, LANE))
+    block_kw = min(block_kw, _ceil_mult(kw, LANE))
+    mp = _ceil_mult(m, block_m)
+    np_ = _ceil_mult(n, block_n)
+    kwp = _ceil_mult(kw, block_kw)
+
+    gemv = m <= SUBLANE and kwp <= GEMV_MAX_KW
+    bm = mp if gemv else block_m
+    bkw = kwp if gemv else block_kw
+    ws = min(words_per_step, bkw)
+    out_w = block_n // WORD_BITS if fused else block_n
+
+    terms = [
+        VmemTerm("a_block", bm * bkw * 4, 1 if gemv else 2),
+        VmemTerm("b_block", block_n * bkw * 4, 2),
+        VmemTerm("out_block", bm * out_w * 4, 2),
+        VmemTerm("mismatch_broadcast", bm * block_n * ws * 4),
+        VmemTerm("y_tile", bm * block_n * 4),
+    ]
+    if fused:
+        terms += [VmemTerm("tau_block", block_n * 4, 2),
+                  VmemTerm("flip_block", block_n * 4, 2)]
+    if not gemv:
+        terms.append(VmemTerm("acc_scratch", block_m * block_n * 4))
+    if gemv:
+        grid: tuple[int, ...] = (np_ // block_n,)
+    else:
+        grid = (mp // block_m, np_ // block_n, kwp // block_kw)
+    return LaunchEstimate(kernel="gemv" if gemv else "gemm",
+                          grid=grid, terms=tuple(terms))
+
+
+def dense_stack_estimate(weight_shapes: Sequence[tuple[int, int]], *,
+                         block_m: int = SUBLANE,
+                         words_per_step: int = 8) -> LaunchEstimate:
+    """Estimate the single-launch hidden stack
+    (``kernels.binary_matmul.binary_dense_stack_packed``).
+
+    ``weight_shapes``: per-stage packed weight shapes (N_s, Kw_s).
+    This IS the arithmetic ``dense_stack_vmem_bytes`` historically
+    hand-rolled (that function now delegates here; the crossover is
+    regression-pinned in tests): the x tile + every stage's lane-padded
+    resident weights and folded tau/flip rows, plus the single largest
+    stage transient — the (bm, n_pad, ws) popcount broadcast, the int32
+    pre-threshold tile, and the repacked words.
+    """
+    prev_words = int(weight_shapes[0][1])
+    terms = [VmemTerm("x_tile", block_m * prev_words * 4)]
+    peak = 0
+    for s, (n_s, _) in enumerate(weight_shapes):
+        n_pad = _ceil_mult(int(n_s), LANE)
+        terms.append(VmemTerm(f"stage{s}_weights", n_pad * prev_words * 4))
+        terms.append(VmemTerm(f"stage{s}_bn", 2 * n_pad * 4))
+        ws = min(words_per_step, prev_words)
+        stage = (block_m * n_pad * (ws + 1) * 4
+                 + block_m * (n_pad // WORD_BITS) * 4)
+        peak = max(peak, stage)
+        prev_words = n_pad // WORD_BITS
+    terms.append(VmemTerm("stage_transient_peak", peak))
+    return LaunchEstimate(kernel="dense_stack", grid=(1,),
+                          terms=tuple(terms))
+
+
+def conv_estimate(batch: int, padded_hw: tuple[int, int], cw: int,
+                  kh: int, kw: int, c_out: int, out_hw: tuple[int, int], *,
+                  block_n: int, block_oh: int, fused: bool = False,
+                  nbits: int = 1) -> LaunchEstimate:
+    """Estimate the fused conv launches of ``kernels.binary_conv``.
+
+    ``padded_hw`` is the spatially padded image size the wrapper stages
+    (``_prep_operands``), ``cw`` the packed channel words.  ``nbits > 1``
+    models the bit-plane first-layer kernel (the plane stack rides in
+    one VMEM block).  ``fused`` adds the BN rows and shrinks the output
+    to packed words; the plain conv instead stages the correction tile.
+    """
+    hp, wp = padded_hw
+    oh, ow = out_hw
+    block_m = block_oh * ow
+    m_tiles = -(-oh // block_oh)
+    c_out_p = _ceil_mult(c_out, block_n)
+    out_w = block_n // WORD_BITS if fused else block_n
+    terms = [
+        # Image BlockSpec depends only on the batch index: resident
+        # across (m, j) steps, double-buffered across batch elements.
+        VmemTerm("image_block", nbits * hp * wp * cw * 4, 2),
+        VmemTerm("weight_block", block_n * kh * kw * cw * 4, 2),
+        VmemTerm("out_block", block_m * out_w * 4, 2),
+        VmemTerm("acc_tile", block_m * block_n * 4),
+    ]
+    if fused:
+        terms += [VmemTerm("tau_block", block_n * 4, 2),
+                  VmemTerm("flip_block", block_n * 4, 2)]
+    elif nbits > 1:
+        terms.append(VmemTerm("rowsum_block", block_n * 4, 2))
+    else:
+        terms.append(VmemTerm("correction_block", block_m * block_n * 4, 2))
+    return LaunchEstimate(
+        kernel="bitplane_conv" if nbits > 1 else
+        ("conv_bn_sign" if fused else "conv"),
+        grid=(batch, m_tiles, c_out_p // block_n),
+        terms=tuple(terms))
+
+
+def attention_estimate(b: int, hq: int, sq: int, skv: int, dw: int,
+                       dv: int, *, block_q: int = 128,
+                       block_kv: int = 128) -> LaunchEstimate:
+    """Estimate the packed flash-attention launch
+    (``kernels.binary_attention.binary_attention_packed``)."""
+    sq_p = _ceil_mult(sq, block_q)
+    skv_p = _ceil_mult(skv, block_kv)
+    dw_p = _ceil_mult(dw, LANE)
+    dv_p = _ceil_mult(dv, LANE)
+    terms = (
+        VmemTerm("q_block", block_q * dw_p * 4, 2),
+        VmemTerm("k_block", block_kv * dw_p * 4, 2),
+        VmemTerm("v_block", block_kv * dv_p * 4, 2),
+        VmemTerm("out_block", block_q * dv_p * 4, 2),
+        VmemTerm("m_scratch", block_q * LANE * 4),
+        VmemTerm("l_scratch", block_q * LANE * 4),
+        VmemTerm("acc_scratch", block_q * dv_p * 4),
+        VmemTerm("scores_tile", block_q * block_kv * 4),
+    )
+    return LaunchEstimate(kernel="binary_attention",
+                          grid=(b * hq, sq_p // block_q, skv_p // block_kv),
+                          terms=terms)
+
+
+def bitpack_estimate(m: int, k: int, *, block_m: int = 256,
+                     block_kw: int = 128) -> LaunchEstimate:
+    """Estimate the sign-binarize + bitpack launch (``kernels.bitpack``)."""
+    kw = -(-k // WORD_BITS)
+    block_m = min(block_m, _ceil_mult(m, SUBLANE))
+    block_kw = min(block_kw, _ceil_mult(kw, LANE))
+    block_k = block_kw * WORD_BITS
+    mp = _ceil_mult(m, block_m)
+    kp = _ceil_mult(k, block_k)
+    terms = (
+        VmemTerm("x_block", block_m * block_k * 4, 2),
+        VmemTerm("out_block", block_m * block_kw * 4, 2),
+        VmemTerm("bits_tile", block_m * block_k * 4),
+    )
+    return LaunchEstimate(kernel="bitpack",
+                          grid=(mp // block_m, kp // block_k), terms=terms)
+
+
+def bn_sign_pack_estimate(m: int, c: int, *, block_m: int = 256,
+                          block_cw: int = LANE) -> LaunchEstimate:
+    """Estimate the standalone BN-sign-repack epilogue launch
+    (``kernels.fused_epilogue.bn_sign_pack``)."""
+    cw = -(-c // WORD_BITS)
+    block_m = min(block_m, _ceil_mult(m, SUBLANE))
+    block_cw = min(block_cw, _ceil_mult(cw, LANE))
+    block_c = block_cw * WORD_BITS
+    mp = _ceil_mult(m, block_m)
+    cp = _ceil_mult(c, block_c)
+    terms = (
+        VmemTerm("x_block", block_m * block_c * 4, 2),
+        VmemTerm("tau_block", block_c * 4, 2),
+        VmemTerm("flip_block", block_c * 4, 2),
+        VmemTerm("out_block", block_m * block_cw * 4, 2),
+        VmemTerm("bits_tile", block_m * block_c * 4),
+    )
+    return LaunchEstimate(kernel="bn_sign_pack",
+                          grid=(mp // block_m, cp // block_c), terms=terms)
+
+
+# ---------------------------------------------------------------------------
+# Traced estimator (per-launch ground truth for the analysis report)
+# ---------------------------------------------------------------------------
+
+def _block_dims(block_shape: Sequence[Any]) -> list[int]:
+    """Block dims as ints (squeezed / mapped dims count as 1)."""
+    return [int(d) if isinstance(d, int) else 1 for d in block_shape]
+
+
+def estimate_eqn(eqn: Any) -> LaunchEstimate:
+    """VMEM estimate of one traced ``pallas_call`` eqn, from its
+    ``grid_mapping`` block shapes + dtypes and its scratch avals.
+
+    A block that covers its whole operand array is pinned (1 buffer);
+    a tiled block is double-buffered (2).  Kernel-internal compute
+    transients are invisible at this level — the closed-form
+    estimators account for those.
+    """
+    gm = eqn.params["grid_mapping"]
+    terms: list[VmemTerm] = []
+    n_in = gm.num_inputs
+    for i, bm in enumerate(gm.block_mappings):
+        asd = bm.array_shape_dtype
+        dims = _block_dims(bm.block_shape)
+        nbytes = _prod(dims) * asd.dtype.itemsize
+        pinned = dims == [int(d) for d in asd.shape]
+        role = "in" if i < n_in else "out"
+        terms.append(VmemTerm(f"{role}{i if i < n_in else i - n_in}_block",
+                              nbytes, 1 if pinned else 2))
+    ns = getattr(gm, "num_scratch_operands", 0)
+    if ns:
+        kjaxpr = eqn.params["jaxpr"]
+        for j, var in enumerate(kjaxpr.invars[-ns:]):
+            aval = var.aval
+            inner = getattr(aval, "inner_aval", aval)
+            if hasattr(inner, "size") and hasattr(inner, "dtype"):
+                terms.append(VmemTerm(
+                    f"scratch{j}",
+                    int(inner.size) * inner.dtype.itemsize))
+    return LaunchEstimate(kernel=graph.kernel_name(eqn),
+                          grid=tuple(int(g) for g in gm.grid),
+                          terms=tuple(terms))
+
+
+def estimate_forward(fn: Any, *args: Any) -> list[LaunchEstimate]:
+    """Traced VMEM estimate of every launch in ``fn``, in trace order."""
+    return [estimate_eqn(eqn) for eqn in graph.pallas_eqns(fn, *args)]

@@ -8,10 +8,14 @@ Proves, without hardware, that ``make_sharded_forward`` is
   exercises the per-stage replication fallback, and (one cell) the
   Pallas backend in interpret mode under shard_map;
 * **collective-free on the data-parallel path**: the compiled HLO of the
-  (8, 1) mesh contains zero collectives (`utils.hlo.collective_bytes`);
+  (8, 1) mesh contains zero collectives;
 * **packed-words-only on the model path**: sharded meshes emit only
   all-gathers (no all-reduce — the conv stack never crosses devices with
   a partial sum or an un-packed int32 activation).
+
+Both rules come from ``analysis.collectives`` (``check_mesh``), the
+shared analyzers the telemetry probes and the merged analysis report
+also consume.
 
 Usage (the CI sharding job and tests/test_sharded_forward.py run this):
 
@@ -33,10 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.collectives import check_mesh, check_model_parallel
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_mesh
 from repro.models import cnn
-from repro.utils.hlo import collective_bytes, collective_kinds
 
 MESH_SHAPES = ((8, 1), (4, 2), (2, 4))
 BATCH = 8
@@ -108,26 +112,21 @@ def run_cells(backends=("jnp",), pallas_cell: bool = True) -> list[dict]:
         np.asarray(jax.block_until_ready(fwd(x)))
         t_steady = time.monotonic() - t0
         bitexact = bool((got == want).all())
-        hlo = fwd.lower(x).compile().as_text()
-        coll = collective_bytes(hlo)
-        kinds = collective_kinds(hlo)
+        # Data-parallel meshes must be collective-free; model meshes may
+        # emit packed-word all-gathers only (a partial sum crossing
+        # chips would surface as an all-reduce).  The rules live in
+        # analysis.collectives so the probes/report apply the same ones.
+        coll = check_mesh(fwd.lower(x).compile().as_text(), shape)
         rec = {
             "kind": kind, "mesh": list(shape), "backend": backend,
             "bitexact": bitexact,
             "shard_plan": {k: list(v) for k, v in fwd.shard_plan.items()},
-            "collective_bytes": coll.get("total", 0.0),
-            "collective_kinds": kinds,
+            "collective_bytes": coll.total_bytes,
+            "collective_kinds": coll.kinds,
+            "collective_violations": list(coll.violations),
             "fwd_first_us": t_first * 1e6, "fwd_us": t_steady * 1e6,
-            "ok": bitexact,
+            "ok": bitexact and coll.ok,
         }
-        if shape[1] == 1:
-            # Pure data parallel: ZERO resharding collectives between
-            # conv stages (or anywhere else in the forward).
-            rec["ok"] &= coll.get("total", 0.0) == 0.0 and not kinds
-        else:
-            # Model parallel: packed-word all-gathers only — a partial
-            # sum (all-reduce) would mean the contraction crossed chips.
-            rec["ok"] &= set(kinds) <= {"all-gather"}
         results.append(rec)
     results.append(serve_cell(built))
     return results
@@ -171,15 +170,16 @@ def serve_cell(built: dict) -> dict:
     t_steady = time.monotonic() - t0
     hlo = eng.fwd.lower(np.zeros((eng.buckets[-1], *eng.example_shape),
                                  np.uint8)).compile().as_text()
-    kinds = collective_kinds(hlo)
+    coll = check_model_parallel(hlo)
     return {
         "kind": "bcnn", "mesh": [4, 2], "backend": "serve",
         "bitexact": bitexact,
         "shard_plan": {k: list(v) for k, v in eng.fwd.shard_plan.items()},
-        "collective_bytes": collective_bytes(hlo).get("total", 0.0),
-        "collective_kinds": kinds,
+        "collective_bytes": coll.total_bytes,
+        "collective_kinds": coll.kinds,
+        "collective_violations": list(coll.violations),
         "fwd_first_us": t_steady * 1e6, "fwd_us": t_steady * 1e6,
-        "ok": (bitexact and set(kinds) <= {"all-gather"}
+        "ok": (bitexact and coll.ok
                and [f.bucket for f in srv.flushes[:2]] == [8, 4]
                and [f.route for f in srv.flushes[:2]] == ["gemv", "gemv"]),
     }

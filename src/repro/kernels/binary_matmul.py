@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem
 from repro.core import binarize as B
 from repro.kernels.fused_epilogue import (bn_sign_bits_to_words,
                                           check_block_lanes,
@@ -390,20 +391,16 @@ def dense_stack_vmem_bytes(weights: list, *,
     tau/flip rows + the activation M tile.  Transient terms (the largest
     single stage): the (block_m, n_pad, ws) popcount broadcast, the
     int32 pre-threshold tile, and the repacked words.
+
+    The arithmetic lives in the shared static VMEM estimator
+    (``analysis.vmem.dense_stack_estimate`` — the same cost model the
+    ops preflight and the autotuner consume); this wrapper keeps the
+    historical array-based signature.  The GEMV-vs-stack crossover is
+    regression-pinned in tests/test_analysis.py.
     """
-    prev_words = weights[0].shape[1]
-    total = block_m * prev_words * 4                     # x tile
-    peak = 0
-    for w in weights:
-        n_pad = _ceil_mult(w.shape[0], _LANE)
-        total += n_pad * prev_words * 4                  # resident weights
-        total += 2 * n_pad * 4                           # tau + flip
-        ws = min(words_per_step, prev_words)
-        stage = (block_m * n_pad * (ws + 1) * 4          # broadcast + y
-                 + block_m * (n_pad // B.WORD_BITS) * 4)  # repacked words
-        peak = max(peak, stage)
-        prev_words = n_pad // B.WORD_BITS
-    return total + peak
+    return vmem.dense_stack_estimate(
+        [tuple(w.shape) for w in weights],
+        block_m=block_m, words_per_step=words_per_step).total
 
 
 def dense_stack_fits_vmem(weights: list, *, budget: int | None = None,

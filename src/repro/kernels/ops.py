@@ -16,6 +16,12 @@ Shared argument semantics (every dispatcher in this module):
   ``block_kw``, ``words_per_step``) only affect the pallas backend, are
   *validated* rather than clamped, and never change the output
   (property-tested).  ``None`` always means "auto-size".
+* **VMEM preflight**: before any Pallas launch, the dispatcher runs the
+  shape-only static estimator (``analysis.vmem``) against the per-core
+  budget (16 MiB default; ``REPRO_VMEM_BUDGET_BYTES`` overrides).  An
+  over-budget launch raises ``analysis.vmem.VmemBudgetError`` with a
+  per-term breakdown at Python call time — before jit traces, compiles,
+  or (on CPU) interprets anything.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import telemetry
+from repro.analysis import vmem as _vmem
 from repro.core import binarize as B
 from repro.kernels import binary_attention as _batt
 from repro.kernels import binary_conv as _bconv
@@ -141,9 +148,12 @@ def binary_matmul_packed(a_packed: jax.Array, b_packed: jax.Array, *,
     """
     backend = _resolve(backend)
     if backend == "pallas":
+        ws = _words_per_step(words_per_step)
+        _vmem.preflight(_vmem.gemm_estimate(
+            a_packed.shape[0], b_packed.shape[0], a_packed.shape[1],
+            words_per_step=ws))
         return _bmm.binary_matmul_packed(
-            a_packed, b_packed, k_true=k_true,
-            words_per_step=_words_per_step(words_per_step),
+            a_packed, b_packed, k_true=k_true, words_per_step=ws,
             interpret=not _on_tpu())
     return B.packed_matmul(a_packed, b_packed, k_true)
 
@@ -170,10 +180,13 @@ def binary_matmul_bn_sign_packed(a_packed: jax.Array, b_packed: jax.Array,
     """
     backend = _resolve(backend)
     if backend == "pallas":
+        ws = _words_per_step(words_per_step)
+        _vmem.preflight(_vmem.gemm_estimate(
+            a_packed.shape[0], b_packed.shape[0], a_packed.shape[1],
+            words_per_step=ws, fused=True))
         return _bmm.binary_matmul_bn_sign_packed(
             a_packed, b_packed, tau, flip, k_true=k_true,
-            words_per_step=_words_per_step(words_per_step),
-            interpret=not _on_tpu())
+            words_per_step=ws, interpret=not _on_tpu())
     return _ref.binary_matmul_bn_sign_packed_ref(a_packed, b_packed, tau,
                                                  flip, k_true)
 
@@ -213,12 +226,16 @@ def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
         return _ref.binary_dense_stack_packed_ref(stages, x_packed)
     weights = [s["w_packed"] for s in stages]
     bm = _bmm.STACK_BLOCK_M if block_m is None else block_m
+    _fe.check_block_sublanes("block_m", bm)
     ws = _words_per_step(words_per_step)
     if resident is None:
         resident = _bmm.dense_stack_fits_vmem(
             weights, budget=vmem_budget_bytes, block_m=bm,
             words_per_step=ws)
     if resident:
+        _vmem.preflight(_vmem.dense_stack_estimate(
+            [tuple(w.shape) for w in weights], block_m=bm,
+            words_per_step=ws))
         return _bmm.binary_dense_stack_packed(
             x_packed, weights,
             [s["tau"] for s in stages], [s["flip"] for s in stages],
@@ -226,6 +243,9 @@ def binary_dense_stack_packed(stages: list, x_packed: jax.Array, *,
             block_m=bm, words_per_step=ws, interpret=not _on_tpu())
     h = x_packed
     for s in stages:
+        _vmem.preflight(_vmem.gemm_estimate(
+            h.shape[0], s["w_packed"].shape[0], s["w_packed"].shape[1],
+            words_per_step=ws, fused=True))
         h = _bmm.binary_matmul_bn_sign_packed(
             h, s["w_packed"], s["tau"], s["flip"], k_true=s["k_true"],
             words_per_step=ws, interpret=not _on_tpu())
@@ -270,6 +290,11 @@ def binary_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             q, k, v, causal=causal, window=window,
             attn_softcap=attn_softcap, q_offset=q_offset)
     d = q.shape[-1]
+    _vmem.preflight(_vmem.attention_estimate(
+        q.shape[0], q.shape[2], q.shape[1], k.shape[1],
+        B.packed_width(d), v.shape[-1],
+        block_q=_batt.DEFAULT_BLOCK_Q if block_q is None else block_q,
+        block_kv=_batt.DEFAULT_BLOCK_KV if block_kv is None else block_kv))
     q_p = bitpack(q, backend=backend)
     k_p = bitpack(k, backend=backend)
     return _batt.binary_attention_packed(
@@ -294,6 +319,7 @@ def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     if backend == "pallas":
         orig_shape = x.shape
         x2 = x.reshape(-1, orig_shape[-1])
+        _vmem.preflight(_vmem.bitpack_estimate(x2.shape[0], x2.shape[1]))
         out = _bp.bitpack(x2, interpret=not _on_tpu())
         return out.reshape(*orig_shape[:-1], out.shape[-1])
     return B.pack_bits(x)
@@ -302,6 +328,25 @@ def bitpack(x: jax.Array, *, backend: str = "auto") -> jax.Array:
 # ---------------------------------------------------------------------------
 # Binary 2-D convolution (kernels/binary_conv.py) + fused epilogue
 # ---------------------------------------------------------------------------
+
+def _conv_preflight(plan: dict, x: jax.Array, *, block_oh: int | None,
+                    block_n: int | None, fused: bool = False,
+                    nbits: int = 1) -> None:
+    """Shared VMEM preflight for the three conv dispatchers: resolve the
+    block knobs exactly like the wrapper will, then budget-check the
+    launch (spatial axes are the last three of ``x`` for both the
+    (B, H, W, Cw) image and the (nbits, B, H, W, Cw) plane stack)."""
+    bn = _bconv.resolve_block_n(block_n, plan["c_out"])
+    oh, ow = plan["out_hw"]
+    boh = _bconv.resolve_block_oh(block_oh, oh, ow)
+    (pt, pb), (pl, pr) = plan["pads"]
+    h, w, cw = x.shape[-3], x.shape[-2], x.shape[-1]
+    batch = x.shape[0] if nbits == 1 else x.shape[1]
+    _vmem.preflight(_vmem.conv_estimate(
+        batch, (h + pt + pb, w + pl + pr), cw, plan["kh"], plan["kw"],
+        plan["c_out"], plan["out_hw"], block_n=bn, block_oh=boh,
+        fused=fused, nbits=nbits))
+
 
 def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
                          backend: str = "auto",
@@ -323,6 +368,7 @@ def binary_conv2d_packed(plan: dict, x_packed: jax.Array, *,
     """
     backend = _resolve(backend)
     if backend == "pallas":
+        _conv_preflight(plan, x_packed, block_oh=block_oh, block_n=block_n)
         return _bconv.binary_conv2d_packed(
             x_packed, plan["w_packed"], plan["correction"],
             kh=plan["kh"], kw=plan["kw"], stride=plan["stride"],
@@ -353,6 +399,8 @@ def binary_conv2d_bn_sign_packed(plan: dict, folded: dict,
     """
     backend = _resolve(backend)
     if backend == "pallas":
+        _conv_preflight(plan, x_packed, block_oh=block_oh, block_n=block_n,
+                        fused=True)
         return _bconv.binary_conv2d_bn_sign_packed(
             x_packed, plan["w_packed"], plan["correction"], folded["tau"],
             folded["flip"], kh=plan["kh"], kw=plan["kw"],
@@ -388,6 +436,8 @@ def bitplane_conv2d_packed(plan: dict, x_uint8: jax.Array, *,
     nbits = plan["nbits"]
     if backend == "pallas":
         x_planes = B.pack_bitplanes_uint8(x_uint8, nbits)
+        _conv_preflight(plan, x_planes, block_oh=block_oh, block_n=block_n,
+                        nbits=nbits)
         return _bconv.bitplane_conv2d_packed(
             x_planes, plan["w_packed"], plan["rowsum"], kh=plan["kh"],
             kw=plan["kw"], stride=plan["stride"], pads=plan["pads"],
@@ -416,6 +466,8 @@ def bn_sign_pack(x: jax.Array, tau: jax.Array, flip: jax.Array, *,
     lead = x.shape[:-1]
     if backend == "pallas":
         x2 = x.reshape(-1, x.shape[-1])
+        _vmem.preflight(_vmem.bn_sign_pack_estimate(x2.shape[0],
+                                                    x2.shape[1]))
         out = _fe.bn_sign_pack(x2, tau, flip, interpret=not _on_tpu())
         return out.reshape(*lead, out.shape[-1])
     return _ref.bn_sign_pack_ref(x, tau, flip)

@@ -5,15 +5,20 @@ Each probe cell traces a registered model config and records only
 machine-independent facts:
 
 * kernel-launch count + per-launch kernel name and grid shape
-  (``utils.jaxpr.pallas_launches`` — the per-PR "traces to exactly 1
+  (``analysis.pallas_launches`` — the per-PR "traces to exactly 1
   pallas_call" asserts, turned into a committed baseline);
 * the GEMV-vs-GEMM route ``kernels.ops.dispatch_batch`` picks for the
   cell's batch;
 * the largest HBM intermediate (bytes + shape) — the fused-epilogue
   contract that packed activations never unpack between stages;
 * for sharded cells: per-device collective wire bytes and kinds from
-  the compiled HLO (``utils.hlo.collective_bytes``) on a forced-8-CPU
-  (4, 2) mesh — all-gather-only, byte-stable.
+  the compiled HLO (``analysis.collectives.analyze_hlo``) on a
+  forced-8-CPU (4, 2) mesh — all-gather-only, byte-stable.
+
+This module is a thin consumer of the static-analysis subsystem
+(``repro.analysis`` — see ``docs/analysis.md``); the deeper invariants
+(packedness dataflow, VMEM budgets, lint) are gated separately by
+``python -m repro.analysis --check``.
 
 The canonical cells cover the shared demo configs
 (``models.cnn.demo_model(smoke=True)`` — the same shapes the serving
@@ -71,9 +76,9 @@ def probe_forward(packed, batch: int, *, backend: str = "pallas",
     Pure tracing — no kernel executes (``jax.make_jaxpr``), so the
     pallas backend is cheap to probe even off-TPU.
     """
+    from repro.analysis import max_intermediate_bytes, pallas_launches
     from repro.kernels import ops as kops
     from repro.models import cnn
-    from repro.utils.jaxpr import max_intermediate_bytes, pallas_launches
 
     fwd = cnn.make_packed_forward(packed, backend=backend,
                                   dense_stack=dense_stack)
@@ -98,38 +103,27 @@ def probe_sharded(packed, batch: int, *,
     model) mesh: wire bytes + collective kinds from the compiled HLO,
     plus the per-stage shard plan.  Requires ``prod(mesh_shape)``
     devices (CI forces host devices; see module docstring)."""
+    from repro.analysis.collectives import analyze_hlo
     from repro.distributed import sharding as SH
     from repro.launch.mesh import make_mesh
     from repro.models import cnn
-    from repro.utils.hlo import collective_bytes, collective_kinds
 
     mesh = make_mesh(mesh_shape, ("data", "model"))
     fwd = SH.make_sharded_forward(packed, mesh, backend="jnp")
     x = np.zeros((batch, *cnn.packed_input_shape(packed)), np.uint8)
-    hlo = fwd.lower(x).compile().as_text()
+    kinds, by_kind = analyze_hlo(fwd.lower(x).compile().as_text())
     return {
         "kind": fwd.kind, "mesh": list(mesh_shape), "batch": batch,
         "shard_plan": {k: list(v) for k, v in fwd.shard_plan.items()},
-        "collective_bytes": float(collective_bytes(hlo).get("total", 0.0)),
-        "collective_kinds": collective_kinds(hlo),
+        "collective_bytes": float(by_kind.get("total", 0.0)),
+        "collective_kinds": kinds,
     }
 
 
 def _demo_packed(kind: str):
-    from repro.models import cnn
+    from repro.analysis.report import demo_packed
 
-    if kind == "transformer":
-        import jax
-
-        from repro.configs import get_config
-        from repro.models import transformer as TF
-
-        cfg = get_config("gemma2-9b", reduced=True)
-        params = TF.init_binary_lm(jax.random.PRNGKey(0), cfg)
-        return TF.pack_transformer(params, cfg, max_len=8)
-    params, spec, kind = cnn.demo_model(kind, smoke=True)
-    pack = cnn.pack_bcnn if kind == "bcnn" else cnn.pack_bmlp
-    return pack(params, spec)
+    return demo_packed(kind)
 
 
 def standard_report(*, sharded: bool = True) -> dict:
@@ -150,31 +144,10 @@ def standard_report(*, sharded: bool = True) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# baseline diff
+# baseline diff (shared with the analysis baseline gate)
 # ---------------------------------------------------------------------------
 
-def diff_reports(baseline: dict, current: dict, path: str = "") -> list[str]:
-    """Recursive structural diff, one human-readable line per drift."""
-    out = []
-    if isinstance(baseline, dict) and isinstance(current, dict):
-        for k in sorted(set(baseline) | set(current)):
-            p = f"{path}/{k}" if path else str(k)
-            if k not in baseline:
-                out.append(f"{p}: NEW (not in baseline)")
-            elif k not in current:
-                out.append(f"{p}: MISSING (in baseline only)")
-            else:
-                out += diff_reports(baseline[k], current[k], p)
-        return out
-    if isinstance(baseline, list) and isinstance(current, list):
-        if len(baseline) != len(current):
-            out.append(f"{path}: length {len(baseline)} -> {len(current)}")
-        for i, (b, c) in enumerate(zip(baseline, current)):
-            out += diff_reports(b, c, f"{path}[{i}]")
-        return out
-    if baseline != current:
-        out.append(f"{path}: {baseline!r} -> {current!r}")
-    return out
+from repro.analysis.report import diff_reports  # noqa: E402  (re-export)
 
 
 # ---------------------------------------------------------------------------

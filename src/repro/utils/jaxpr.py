@@ -1,111 +1,21 @@
-"""Jaxpr inspection helpers shared by the benchmarks, the test suite,
-and the telemetry probes.
-
-The kernel subsystem's evidence ("the bit-plane conv is ONE launch",
-"the patch matrix never hits HBM") is op-count-level: it comes from
-walking a traced jaxpr, recursing into nested (pjit) bodies.  ONE
-recursive traversal (:func:`iter_eqns`) backs every consumer —
-:func:`pallas_launches` (kernel name + grid per launch, what the
-telemetry cost probes record), the :func:`pallas_grids` /
-:func:`count_pallas_calls` views over it, and
-:func:`max_intermediate_bytes` (the largest HBM intermediate, the
-fused-epilogue evidence) — so the recursion rule cannot drift between
-them.  ``pallas_call`` bodies are never descended into: everything
-inside one is a single launch's VMEM-resident work, not an HBM
-intermediate or a separate launch.
+"""Back-compat shim: the jaxpr traversal moved to
+``repro.analysis.graph`` (the shared core under every static pass —
+see ``docs/analysis.md``).  Existing call sites keep importing
+``pallas_launches``/``pallas_grids``/``max_intermediate_bytes`` etc.
+from here; new code should import from ``repro.analysis``.
 """
-from __future__ import annotations
+from repro.analysis.graph import (CALL_PRIMITIVES, PallasLaunch,
+                                  call_subjaxpr, count_pallas_calls,
+                                  iter_eqns, kernel_name,
+                                  max_intermediate_bytes, pallas_eqns,
+                                  pallas_grids, pallas_launches, subjaxprs)
 
-import dataclasses
+# Older private spelling, kept for any external consumers.
+_kernel_name = kernel_name
 
-import jax
-
-try:                                   # jax >= 0.6 moved these aliases
-    from jax.extend.core import ClosedJaxpr, Jaxpr
-except ImportError:                    # jax <= 0.5
-    from jax.core import ClosedJaxpr, Jaxpr
-
-
-def subjaxprs(param):
-    """Yield every jaxpr nested inside one eqn param (lists included)."""
-    if isinstance(param, ClosedJaxpr):
-        yield param.jaxpr
-    elif isinstance(param, Jaxpr):
-        yield param
-    elif isinstance(param, (list, tuple)):
-        for e in param:
-            yield from subjaxprs(e)
-
-
-def iter_eqns(jaxpr):
-    """Yield every eqn in ``jaxpr``, recursing into nested jaxprs (jit /
-    scan / cond bodies) but NOT into ``pallas_call`` kernel bodies — a
-    kernel's internal eqns are one launch's VMEM work, not separate
-    launches or HBM intermediates."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for p in eqn.params.values():
-            for sub in subjaxprs(p):
-                yield from iter_eqns(sub)
-
-
-@dataclasses.dataclass(frozen=True)
-class PallasLaunch:
-    """One traced ``pallas_call``: the kernel's name and launch grid."""
-    kernel: str
-    grid: tuple[int, ...]
-
-
-def _kernel_name(eqn) -> str:
-    info = eqn.params.get("name_and_src_info")
-    if info is not None and getattr(info, "name", None):
-        return str(info.name)
-    name = eqn.params.get("name")           # older jax spelling
-    return str(name) if name else "pallas_call"
-
-
-def pallas_launches(fn, *args) -> list[PallasLaunch]:
-    """Every pallas_call in ``fn``'s jaxpr, in trace order, with its
-    kernel name and launch grid — the unit the telemetry cost probes
-    (``telemetry/probes.py``) record and regression-gate."""
-    closed = jax.make_jaxpr(fn)(*args)
-    return [PallasLaunch(kernel=_kernel_name(eqn),
-                         grid=tuple(eqn.params["grid_mapping"].grid))
-            for eqn in iter_eqns(closed.jaxpr)
-            if eqn.primitive.name == "pallas_call"]
-
-
-def pallas_grids(fn, *args) -> list[tuple[int, ...]]:
-    """Launch grid of every pallas_call in ``fn``'s jaxpr, in trace order.
-
-    The serving subsystem's GEMV-vs-GEMM evidence is launch-*shape*
-    level: a batch ≤ 8 dense flush must lower to the N-major 1-D GEMV
-    grid and a large flush to the 3-D (M, N, K) blocked GEMM grid
-    (``kernels.ops.dispatch_batch``).
-    """
-    return [launch.grid for launch in pallas_launches(fn, *args)]
-
-
-def count_pallas_calls(fn, *args) -> int:
-    """Number of pallas_call primitives in ``fn``'s jaxpr — the
-    kernel-launch count of the traced fn, recursing into jit bodies."""
-    return len(pallas_launches(fn, *args))
-
-
-def max_intermediate_bytes(fn, *args) -> tuple[int, tuple[int, ...]]:
-    """(bytes, shape) of the largest intermediate any eqn produces —
-    the HBM high-water evidence for the fused epilogues (an eqn output
-    is an HBM-visible array at jaxpr level; pallas_call bodies are
-    excluded, their internals live in VMEM)."""
-    closed = jax.make_jaxpr(fn)(*args)
-    best_bytes, best_shape = 0, ()
-    for eqn in iter_eqns(closed.jaxpr):
-        for v in eqn.outvars:
-            aval = v.aval
-            if hasattr(aval, "shape") and hasattr(aval, "dtype"):
-                nbytes = int(aval.size) * aval.dtype.itemsize
-                if nbytes > best_bytes:
-                    best_bytes, best_shape = nbytes, tuple(aval.shape)
-    return best_bytes, best_shape
+__all__ = [
+    "CALL_PRIMITIVES", "PallasLaunch", "call_subjaxpr",
+    "count_pallas_calls", "iter_eqns", "kernel_name",
+    "max_intermediate_bytes", "pallas_eqns", "pallas_grids",
+    "pallas_launches", "subjaxprs",
+]

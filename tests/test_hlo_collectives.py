@@ -1,0 +1,57 @@
+"""Direct unit tests for the compiled-HLO collective parser
+(``utils/hlo.py``) on synthetic HLO text — previously exercised only
+through the 8-device ``verify_sharded`` subprocess sweep.  The byte
+model and the regex shapes are the contract the sharding analyzers
+(``analysis.collectives``) and the probes build on."""
+from repro.utils.hlo import collective_bytes, collective_kinds
+
+
+def test_all_gather_output_bytes():
+    hlo = ("  %ag = u32[8,16]{1,0} all-gather(u32[2,16]{1,0} %p), "
+           "dimensions={0}\n")
+    assert collective_kinds(hlo) == {"all-gather": 1}
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 8 * 16 * 4        # u32 output bytes
+    assert got["total"] == got["all-gather"]
+
+
+def test_all_reduce_double_counted():
+    # all-reduce ~ reduce-scatter + all-gather ring: 2x the bytes.
+    hlo = "  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%a\n"
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 2 * 128 * 4
+
+
+def test_tuple_shaped_collective():
+    hlo = ("  %cp = (f32[64]{0}, f32[64]{0}) collective-permute("
+           "f32[64]{0} %x, f32[64]{0} %y)\n")
+    assert collective_kinds(hlo) == {"collective-permute": 1}
+    assert collective_bytes(hlo)["collective-permute"] == 2 * 64 * 4
+
+
+def test_async_start_variant_matches():
+    hlo = ("  %ag = bf16[32,8]{1,0} all-gather-start(bf16[4,8]{1,0} %p), "
+           "dimensions={0}\n")
+    assert collective_kinds(hlo) == {"all-gather": 1}
+    assert collective_bytes(hlo)["all-gather"] == 32 * 8 * 2
+
+
+def test_mixed_module_accumulates_per_kind():
+    hlo = (
+        "  %a = u32[16]{0} all-gather(u32[4]{0} %p), dimensions={0}\n"
+        "  %b = u32[8]{0} all-gather(u32[2]{0} %q), dimensions={0}\n"
+        "  %c = s32[4]{0} reduce-scatter(s32[16]{0} %r), to_apply=%add\n"
+    )
+    kinds = collective_kinds(hlo)
+    assert kinds == {"all-gather": 2, "reduce-scatter": 1}
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == (16 + 8) * 4
+    assert got["reduce-scatter"] == 4 * 4
+    assert got["total"] == got["all-gather"] + got["reduce-scatter"]
+
+
+def test_non_collective_ops_ignored():
+    hlo = ("  %d = f32[1024]{0} dot(f32[1024,64]{1,0} %w, f32[64]{0} %x)\n"
+           "  %g = u32[8]{0} gather(u32[64]{0} %t, s32[8]{0} %i)\n")
+    assert collective_kinds(hlo) == {}
+    assert collective_bytes(hlo)["total"] == 0.0
