@@ -1,5 +1,8 @@
 from repro.checkpoint.checkpointer import (save_checkpoint, load_checkpoint,
                                            latest_step, AsyncCheckpointer)
+from repro.checkpoint.packed import (save_packed_checkpoint,
+                                     load_packed_checkpoint)
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "AsyncCheckpointer", "save_packed_checkpoint",
+           "load_packed_checkpoint"]

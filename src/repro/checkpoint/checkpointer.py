@@ -87,18 +87,30 @@ def load_checkpoint(ckpt_dir: str, step: int, template,
 
 
 class AsyncCheckpointer:
-    """Overlap checkpoint writes with training (one in-flight save)."""
+    """Overlap checkpoint writes with training (one in-flight save).
+
+    A save that raises in the worker thread is NOT silently lost: the
+    exception is recorded and re-raised from the next :meth:`wait` —
+    and, because :meth:`save` waits for the in-flight write first, from
+    the next ``save`` as well.  A supervisor restarting from "the last
+    checkpoint" therefore finds out the last checkpoint never landed
+    instead of restoring something older than it believes.
+    """
 
     def __init__(self, ckpt_dir: str):
         self.ckpt_dir = ckpt_dir
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def save(self, step: int, tree, extra: dict | None = None) -> None:
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)   # snapshot on host
 
         def work():
-            save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+            except BaseException as e:       # surfaced by wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -107,3 +119,6 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

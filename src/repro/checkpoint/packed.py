@@ -1,0 +1,92 @@
+"""Packed-weight checkpoints: save/restore the serving cache's trees.
+
+A ``pack_bcnn``/``pack_bmlp`` tree is MIXED: array leaves (packed words,
+folded tau/flip, corrections, pool-mask words) interleave with statics
+(plan geometry ints, ``None`` pool masks, the spec dataclass).  Statics
+cannot round-trip through ``npz`` — and must not: they are derived from
+the model config, which the restoring process already has.  So a packed
+checkpoint saves ONLY the array leaves, keyed by tree path, and restore
+grafts them into a caller-supplied template tree (``demo_model`` /
+``pack_*`` output of the same config), re-placing each leaf under the
+restore-time mesh via ``distributed.sharding.shard_packed`` — the
+elastic warm-restart path: the survivor mesh's own divisibility plan
+decides the new placement, same reshard-on-restore contract as
+``load_checkpoint``.
+
+Layout reuses :func:`repro.checkpoint.save_checkpoint`'s atomic
+``step_<N>/arrays.npz + meta.json`` scheme (tmp + rename), so
+``latest_step`` and crash-safety apply unchanged; ``meta.extra`` tags
+the tree kind for a cheap mismatch check at restore.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import load_checkpoint, save_checkpoint
+
+
+def _array_leaves(tree) -> dict[str, np.ndarray]:
+    """{'/'-joined path: host array} for every array leaf (statics and
+    None leaves skipped) — same path scheme as the checkpointer's."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            continue
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_packed_checkpoint(ckpt_dir: str, step: int, packed,
+                           extra: dict | None = None) -> str:
+    """Write the array leaves of a packed tree (atomic, step-tagged)."""
+    from repro.models.cnn import packed_kind
+    arrays = _array_leaves(packed)
+    meta = {"packed_kind": packed_kind(packed), "n_arrays": len(arrays)}
+    meta.update(extra or {})
+    return save_checkpoint(ckpt_dir, step, arrays, extra=meta)
+
+
+def load_packed_checkpoint(ckpt_dir: str, step: int, template, *,
+                           mesh=None):
+    """Graft a packed checkpoint's arrays into ``template``.
+
+    ``template`` is a freshly built packed tree of the SAME config (its
+    statics are kept verbatim; its array leaves are replaced by the
+    checkpointed values).  With ``mesh`` the restored tree is placed by
+    ``shard_packed`` under that mesh — restore-onto-survivors in one
+    call.  Raises ``KeyError`` if the checkpoint is missing a leaf the
+    template has (config mismatch), ``ValueError`` on kind mismatch.
+    """
+    import json
+    import os
+
+    from repro.models.cnn import packed_kind
+
+    # kind check BEFORE grafting: a config mismatch must fail as such,
+    # not as a missing-array KeyError halfway through the restore
+    meta_path = os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")
+    with open(meta_path) as f:
+        got_kind = json.load(f)["extra"].get("packed_kind")
+    want_kind = packed_kind(template)
+    if got_kind is not None and got_kind != want_kind:
+        raise ValueError(f"packed checkpoint kind {got_kind!r} != "
+                         f"template kind {want_kind!r}")
+    tmpl_arrays = _array_leaves(template)
+    saved, meta = load_checkpoint(ckpt_dir, step, tmpl_arrays)
+
+    def graft(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            return leaf
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        return saved[key]
+
+    restored = jax.tree_util.tree_map_with_path(graft, template)
+    if mesh is not None:
+        from repro.distributed.sharding import shard_packed
+        restored = shard_packed(restored, mesh)
+    return restored, meta

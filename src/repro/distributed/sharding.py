@@ -475,6 +475,26 @@ def shard_packed(packed: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map_with_path(put, packed)
 
 
+def reshard_packed(packed: Any, mesh: Mesh | None) -> Any:
+    """Move a packed tree to a DIFFERENT mesh (elastic degradation).
+
+    Array leaves are pulled to host first — after a (simulated) device
+    loss the old placements may reference devices that no longer exist,
+    so re-placement must not read through them lazily inside a jit.
+    ``mesh=None`` returns the host-resident tree (the checkpoint-shaped
+    view); otherwise the tree is placed via :func:`shard_packed` under
+    the new mesh's own divisibility plan.  Cheap by construction: the
+    paper's 32x weight compression means the bytes crossing host here
+    are the packed words, not fp32 weights.
+    """
+    import numpy as np
+    host = jax.tree.map(lambda l: np.asarray(l) if _is_array(l) else l,
+                        packed)
+    if mesh is None:
+        return host
+    return shard_packed(host, mesh)
+
+
 # `shard_bcnn` / `shard_bmlp`: explicit entry points (same placement,
 # kind-checked).
 def shard_bcnn(packed: Any, mesh: Mesh) -> Any:

@@ -129,6 +129,7 @@ def run_cells(backends=("jnp",), pallas_cell: bool = True) -> list[dict]:
         }
         results.append(rec)
     results.append(serve_cell(built))
+    results.append(degrade_cell(built))
     return results
 
 
@@ -182,6 +183,63 @@ def serve_cell(built: dict) -> dict:
         "ok": (bitexact and coll.ok
                and [f.bucket for f in srv.flushes[:2]] == [8, 4]
                and [f.route for f in srv.flushes[:2]] == ["gemv", "gemv"]),
+    }
+
+
+def degrade_cell(built: dict) -> dict:
+    """Elastic-degradation cell: a supervised server on the (4, 2) mesh
+    loses 4 of its 8 devices mid-flight (``runtime.faults`` injection).
+
+    The ``ServingSupervisor`` must remesh onto the 4 survivors
+    (``remesh_plan`` -> (2, 2)), re-place the packed weights, rebuild
+    the engine UNDER the queue, and serve the requeued window — rows
+    bit-identical to the single-device forward, with the shrunken
+    engine's compiled HLO still obeying the all-gather-only rule
+    (a degrade must not smuggle in an all-reduce).
+    """
+    from repro.runtime.faults import FaultInjector, FaultPlan, FaultSpec
+    from repro.runtime.supervisor import ServingSupervisor
+    from repro.train import serve as SV
+
+    packed, x, want = built["bcnn"]
+    clock = SV.SimClock()
+    srv = SV.PackedInferenceServer(max_batch=BATCH,
+                                   default_deadline=0.005, clock=clock)
+    srv.register("bcnn-degrade", packed=packed, backend="jnp",
+                 mesh=make_mesh((4, 2), ("data", "model")))
+    sup = ServingSupervisor(srv, "bcnn-degrade", backend="jnp")
+    FaultInjector(FaultPlan.of(
+        FaultSpec("device_loss", survivors=4))).attach(srv)
+    rids = [srv.submit(np.asarray(x[i])) for i in range(BATCH)]
+    t0 = time.monotonic()
+    done = sup.step()           # loss -> degrade -> requeued window served
+    t_first = time.monotonic() - t0
+    by = {r.rid: r for r in done}
+    bitexact = (all(by[rid].status == "ok" for rid in rids) and
+                bool((np.stack([by[rid].result for rid in rids])
+                      == np.asarray(want)).all()))
+    eng = srv.engine("bcnn-degrade")
+    t0 = time.monotonic()
+    srv.serve([np.asarray(x[i]) for i in range(BATCH)])
+    t_steady = time.monotonic() - t0
+    hlo = eng.fwd.lower(np.zeros((eng.buckets[-1], *eng.example_shape),
+                                 np.uint8)).compile().as_text()
+    coll = check_model_parallel(hlo)
+    m = srv.telemetry.metrics
+    return {
+        "kind": "bcnn", "mesh": [2, 2], "backend": "degrade",
+        "bitexact": bitexact,
+        "shard_plan": {k: list(v) for k, v in eng.fwd.shard_plan.items()},
+        "collective_bytes": coll.total_bytes,
+        "collective_kinds": coll.kinds,
+        "collective_violations": list(coll.violations),
+        "fwd_first_us": t_first * 1e6, "fwd_us": t_steady * 1e6,
+        "ok": (bitexact and coll.ok
+               and sup.events[0].mesh_shape == (2, 2)
+               and tuple(eng.fwd.mesh.shape.values()) == (2, 2)
+               and len(eng.fwd.mesh.devices.flatten()) == 4
+               and m.value("serve.degraded") == 1
+               and m.value("serve.degraded_state") == 0),
     }
 
 

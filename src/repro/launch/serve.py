@@ -15,6 +15,9 @@ throughput, and the GEMV/GEMM route of every flush:
     # CI smoke: tiny shapes, few requests
     PYTHONPATH=src python -m repro.launch.serve --model bmlp --smoke
 
+    # chaos drill: scripted faults (docs/robustness.md), recovery report
+    PYTHONPATH=src python -m repro.launch.serve --chaos --smoke
+
 The old LM prefill/decode demo lives in ``examples/serve_binary_lm.py``
 (the ``BatchedServer`` driver).
 """
@@ -36,6 +39,8 @@ def _prescan_mesh(argv: list[str]) -> str | None:
 
 
 _shape = _prescan_mesh(sys.argv)
+if _shape is None and "--chaos" in sys.argv:
+    _shape = "4,2"          # the chaos drill needs 8 devices to lose 4
 if _shape is not None:
     try:
         _n = 1
@@ -48,6 +53,7 @@ if _shape is not None:
         pass                                    # argparse will complain
 
 import argparse
+import dataclasses
 import json
 import statistics
 import time
@@ -56,6 +62,174 @@ import numpy as np
 
 from repro.models import cnn
 from repro.train import serve as SV
+
+
+def run_chaos(args) -> None:
+    """The chaos drill: scripted faults of every kind against one
+    supervised server, then a recovery report + hard invariants.
+
+    Phases (each installs a fresh ``FaultInjector`` so its dispatch
+    indices are phase-local; the ``SimClock`` makes the whole drill
+    deterministic):
+
+    1. ``transient``   — dispatch fails twice, heals inside the retry
+       budget: every request ``ok``, retries > 0.
+    2. ``poison``      — one rid fails every cohort containing it:
+       bisection isolates it (``error``), cohort-mates ``ok``.
+    3. ``persistent``  — a whole cohort keeps failing (``error`` x4);
+       the NEXT wave is untouched (failure isolation).
+    4. ``slow``        — a 1 s flush stall; the following wave ages past
+       ``timeout_grace`` and completes ``timeout``.
+    5. ``device_loss`` — 8 -> 4 devices: elastic degrade (remesh +
+       packed-checkpoint warm restore + engine rebuild under the
+       queue), requeued wave served ``ok`` and bit-exact.
+    6. ``shed``        — queue filled to ``max_queue``; the next submit
+       raises the typed ``BackpressureError``.
+    7. ``recovery``    — a clean wave on the degraded mesh: all ``ok``,
+       bit-exact, degraded gauge back at 0.
+
+    Exits non-zero if any invariant fails (the CI chaos job's gate):
+    retries > 0, zero requests lost (every admitted rid terminal),
+    degraded gauge 0 after recovery, post-degrade rows bit-exact.
+    """
+    import tempfile
+
+    import jax
+
+    from repro.launch.mesh import make_mesh
+    from repro.runtime import FaultInjector, FaultPlan, FaultSpec
+    from repro.runtime.supervisor import ServingSupervisor
+
+    assert len(jax.devices()) == 8, jax.devices()
+    params, spec, kind = cnn.demo_model(args.model, smoke=True)
+    clock = SV.SimClock()
+    srv = SV.PackedInferenceServer(
+        max_batch=8, default_deadline=args.deadline_ms / 1e3,
+        max_queue=16, timeout_grace=50.0, clock=clock)
+    srv.register("demo", params, spec, kind=kind, backend=args.backend,
+                 mesh=make_mesh((4, 2), ("data", "model")))
+    eng = srv.engine()
+    sup = ServingSupervisor(srv, "demo",
+                            ckpt_dir=tempfile.mkdtemp(prefix="chaos_ckpt_"),
+                            backend=args.backend)
+    sup.checkpoint()                     # healthy-path packed checkpoint
+
+    rng = np.random.default_rng(0)
+    xs = rng.integers(0, 256, (16, *eng.example_shape), dtype=np.uint8)
+    from repro.distributed.sharding import reshard_packed
+    ref_fwd = cnn.make_packed_forward(
+        reshard_packed(eng.packed, None), backend="jnp")
+    ref = np.asarray(ref_fwd(xs))        # single-device truth rows
+
+    submitted: list[int] = []
+    finished: dict[int, SV.ServeRequest] = {}
+    shed = 0
+    report: list[dict] = []
+
+    def wave(n: int, *, plan=None, supervised=False, advance=0.006,
+             phase=""):
+        nonlocal finished
+        inj = FaultInjector(plan).attach(srv) if plan is not None else None
+        if plan is None:
+            srv.flush_hook = None
+        wave_rids = []
+        for _ in range(n):
+            i = len(submitted) % 16
+            rid = srv.submit(xs[i])
+            submitted.append(rid)
+            wave_rids.append((rid, i))
+        clock.advance(advance)
+        done = sup.step() if supervised else srv.step()
+        for r in done:
+            finished[r.rid] = r
+        statuses = {rid: finished[rid].status if rid in finished else "LOST"
+                    for rid, _ in wave_rids}
+        exact = all(
+            finished[rid].status != "ok"
+            or (np.asarray(finished[rid].result) == ref[i]).all()
+            for rid, i in wave_rids)
+        report.append({"phase": phase, "statuses": list(statuses.values()),
+                       "bitexact": exact,
+                       "injected": list(inj.injected) if inj else []})
+        return [finished.get(rid) for rid, _ in wave_rids]
+
+    print("chaos drill: 7 phases on a (4,2) mesh, SimClock-driven")
+    wave(8, plan=FaultPlan.of(FaultSpec("transient", times=2)),
+         phase="transient")
+    poison_rid = len(submitted) + 3
+    wave(8, plan=FaultPlan.of(FaultSpec("poison", rid=poison_rid)),
+         phase="poison")
+    wave(4, plan=FaultPlan.of(FaultSpec("persistent")), phase="persistent")
+    wave(4, plan=None, phase="persistent-aftermath")
+    wave(4, plan=FaultPlan.of(FaultSpec("slow", delay_s=1.0)), phase="slow")
+    wave(4, plan=None, advance=0.400, phase="slow-aftermath(timeout)")
+    wave(8, plan=FaultPlan.of(FaultSpec("device_loss", survivors=4)),
+         supervised=True, phase="device_loss")
+    # shed: fill the queue to max_queue, the next submit must raise
+    srv.flush_hook = None
+    shed_rids = [srv.submit(xs[i % 16]) for i in range(16)]
+    submitted.extend(shed_rids)
+    try:
+        srv.submit(xs[0])
+        report.append({"phase": "shed", "statuses": ["NOT-RAISED"],
+                       "bitexact": True, "injected": []})
+    except SV.BackpressureError:
+        shed += 1
+        report.append({"phase": "shed", "statuses": ["shed"],
+                       "bitexact": True, "injected": []})
+    clock.advance(0.006)
+    for r in sup.step():
+        finished[r.rid] = r
+    wave(8, plan=None, phase="recovery")
+
+    m = srv.telemetry.metrics
+    lost = [rid for rid in submitted
+            if rid not in finished
+            or finished[rid].status not in SV.TERMINAL_STATES]
+    tally = {s: sum(1 for r in finished.values() if r.status == s)
+             for s in SV.TERMINAL_STATES}
+    tally["shed"] = shed
+    invariants = {
+        "retries>0": m.value("serve.retries") > 0,
+        "errors>0": m.value("serve.errors") > 0,
+        "timeouts>0": m.value("serve.timeouts") > 0,
+        "shed>0": m.value("serve.shed") > 0,
+        "degraded==1": m.value("serve.degraded") == 1,
+        "degraded_state==0": m.value("serve.degraded_state") == 0,
+        "zero_lost": not lost,
+        "all_waves_bitexact": all(p["bitexact"] for p in report),
+        "recovery_all_ok": all(
+            r.status == "ok" for r in finished.values()
+            if r.rid in submitted[-8:]),
+        "ckpt_restore": bool(sup.events
+                             and sup.events[0].restored_from == "checkpoint"),
+        "survivor_mesh": bool(sup.events
+                              and sup.events[0].mesh_shape == (2, 2)),
+    }
+    for p in report:
+        print(f"  {p['phase']:26s} {p['statuses']}"
+              f"{'' if p['bitexact'] else '  BITEXACT-FAIL'}")
+    print(f"terminal tally: {tally}  (submitted={len(submitted)}, "
+          f"lost={len(lost)})")
+    print(f"degrade events: {[dataclasses.asdict(e) for e in sup.events]}")
+    print("recovery invariants:")
+    for name, ok in invariants.items():
+        print(f"  [{'PASS' if ok else 'FAIL'}] {name}")
+    out = {
+        "tally": tally, "submitted": len(submitted),
+        "lost": len(lost), "invariants": invariants, "phases": report,
+        "events": [dataclasses.asdict(e) for e in sup.events],
+        "metrics": {k: v for k, v in m.snapshot().items()
+                    if k.startswith(("serve.", "faults."))},
+    }
+    if args.chaos_report:
+        with open(args.chaos_report, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+        print(f"wrote chaos report -> {args.chaos_report}")
+    bad = [n for n, ok in invariants.items() if not ok]
+    if bad:
+        raise SystemExit(f"chaos drill FAILED: {bad}")
+    print("chaos drill PASSED: server degraded, recovered, lost nothing")
 
 
 def main() -> None:
@@ -73,6 +247,13 @@ def main() -> None:
                     help="data,model mesh behind the queue, e.g. 2,2")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized shapes and request count")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the scripted fault-injection drill "
+                         "(docs/robustness.md) and print a recovery "
+                         "report; exits non-zero if any recovery "
+                         "invariant fails")
+    ap.add_argument("--chaos-report", default=None, metavar="PATH",
+                    help="write the chaos recovery report as JSON")
     ap.add_argument("--metrics", action="store_true",
                     help="print the server's telemetry metrics snapshot "
                          "as JSON after the run")
@@ -83,6 +264,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 12)
+    if args.chaos:
+        run_chaos(args)
+        return
 
     params, spec, kind = cnn.demo_model(args.model, smoke=args.smoke)
     srv = SV.PackedInferenceServer(max_batch=args.max_batch,

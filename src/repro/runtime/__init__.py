@@ -1,0 +1,28 @@
+"""Runtime: keep training and serving alive through failures.
+
+* ``fault_tolerance`` — training-loop supervision (checkpoint/restart,
+  straggler re-dispatch).
+* ``elastic`` — survivor-mesh planning on device-set change.
+* ``faults`` — the fault-injection harness (scripted chaos via the
+  server's ``flush_hook`` seam).
+* ``supervisor`` — serving-loop supervision (device loss -> elastic
+  mesh degradation with packed-weight warm restore).
+"""
+from repro.runtime.elastic import MeshPlan, remesh_plan
+from repro.runtime.fault_tolerance import (StepFailure, Supervisor,
+                                           SupervisorConfig,
+                                           SupervisorReport)
+from repro.runtime.faults import (FAULT_KINDS, FaultInjector, FaultPlan,
+                                  FaultSpec, InjectedFault,
+                                  PersistentFlushError, PoisonRequestError,
+                                  TransientFlushError)
+from repro.runtime.supervisor import DegradeEvent, ServingSupervisor
+
+__all__ = [
+    "MeshPlan", "remesh_plan",
+    "StepFailure", "Supervisor", "SupervisorConfig", "SupervisorReport",
+    "FAULT_KINDS", "FaultInjector", "FaultPlan", "FaultSpec",
+    "InjectedFault", "PersistentFlushError", "PoisonRequestError",
+    "TransientFlushError",
+    "DegradeEvent", "ServingSupervisor",
+]

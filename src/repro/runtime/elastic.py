@@ -28,12 +28,31 @@ class MeshPlan:
 
 def remesh_plan(n_devices: int, *, prefer_model: int,
                 min_model: int = 1) -> MeshPlan:
-    """Largest (data, model) factorization of n_devices keeping model
-    parallel degree at ``prefer_model`` when it divides, else the largest
-    power-of-two divisor >= min_model."""
-    model = prefer_model
-    while model > min_model and n_devices % model:
-        model //= 2
+    """Largest (data, model) factorization of ``n_devices`` keeping the
+    model-parallel degree at ``prefer_model`` when it divides, else the
+    largest power-of-two divisor of ``n_devices`` that is
+    ``<= prefer_model`` (clamped to ``>= min_model``).  The degree never
+    *grows* on a shrink — growing TP would re-layout every packed weight
+    word instead of just the data axis.
+
+    Raises ``ValueError`` for a non-positive device count (an empty
+    survivor set has no mesh — the supervisor must escalate, not serve),
+    or when ``min_model`` cannot be honored.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if prefer_model < 1 or min_model < 1:
+        raise ValueError(
+            f"prefer_model/min_model must be >= 1, got "
+            f"{prefer_model}/{min_model}")
+    if n_devices % prefer_model == 0:
+        model = prefer_model
+    else:
+        model = 1
+        while model * 2 <= prefer_model and n_devices % (model * 2) == 0:
+            model *= 2
     model = max(model, min_model)
-    data = n_devices // model
-    return MeshPlan((data, model), ("data", "model"))
+    if n_devices % model:
+        raise ValueError(
+            f"min_model={min_model} does not divide n_devices={n_devices}")
+    return MeshPlan((n_devices // model, model), ("data", "model"))

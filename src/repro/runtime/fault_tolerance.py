@@ -105,17 +105,21 @@ class Supervisor:
                 for i in range(start, num_steps):
                     t0 = time.monotonic()
                     deadline = self._deadline()
-                    try:
-                        state, metrics = self.step_fn(state, i)
+                    pre_state = state      # re-dispatch must NOT see the
+                    try:                   # straggler's own update
+                        state, metrics = self.step_fn(pre_state, i)
                     except StepFailure:
                         raise
                     dt = time.monotonic() - t0
                     if dt > deadline:
-                        # straggler: bounded speculative re-dispatch
+                        # straggler: bounded speculative re-dispatch,
+                        # from the PRE-step state — the slow attempt's
+                        # result is discarded, step i applies exactly
+                        # once (backup-task semantics)
                         self.report.stragglers_redispatched += 1
                         self._m_stragglers.inc()
                         t0 = time.monotonic()
-                        state, metrics = self.step_fn(state, i)
+                        state, metrics = self.step_fn(pre_state, i)
                         dt = time.monotonic() - t0
                     self._durations.append(dt)
                     if len(self._durations) > 64:

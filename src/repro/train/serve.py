@@ -44,19 +44,78 @@ from repro.telemetry import MetricsRegistry, Telemetry
 # Packed-inference serving (Espresso prediction phase)
 # ---------------------------------------------------------------------------
 
+class BackpressureError(RuntimeError):
+    """Typed admission shed: the queue is full, the request was NEVER
+    admitted (no rid) — the caller sheds or retries later.  Subclasses
+    ``RuntimeError`` so pre-existing callers that caught the untyped
+    backpressure signal keep working."""
+
+
+class DeviceLossError(RuntimeError):
+    """A device backing the active engine disappeared mid-flush.
+
+    NOT batch-local: retrying or bisecting the batch cannot help when
+    the hardware under the compiled forward is gone, so the server
+    requeues the in-flight window (zero requests lost) and re-raises
+    for a supervisor (``runtime.ServingSupervisor``) to shrink the mesh
+    and rebuild the engine on the survivors.
+    """
+
+    def __init__(self, survivors: int, msg: str | None = None):
+        super().__init__(msg or f"device lost; {survivors} survivor(s)")
+        self.survivors = survivors
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for failing flushes.
+
+    A cohort gets ``1 + max_retries`` dispatch attempts; the k-th retry
+    sleeps ``min(max_backoff_s, backoff_base_s * backoff_factor**(k-1))``
+    first.  Once the budget is spent a multi-request cohort BISECTS —
+    each half gets a fresh budget — so one poison request cannot
+    repeatedly kill whole cohorts: bisection isolates it in
+    ``O(log batch)`` dispatches and only the singleton completes as
+    ``error``.  ``DeviceLossError`` is never retried here (it is not a
+    batch-local fault; see its docstring).
+    """
+    max_retries: int = 2
+    backoff_base_s: float = 0.001
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 0.250
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (1-based), capped."""
+        return min(self.max_backoff_s,
+                   self.backoff_base_s * self.backoff_factor
+                   ** (attempt - 1))
+
+
+#: Terminal request states (exactly one per admitted request):
+#: served (``ok``), deadline exceeded past the grace factor
+#: (``timeout``), flush failed after retries + bisection (``error``).
+#: The fourth lifecycle outcome, ``shed``, never gets a rid — ``submit``
+#: raises :class:`BackpressureError` before admission.
+TERMINAL_STATES = ("ok", "timeout", "error")
+
+
 @dataclasses.dataclass
 class ServeRequest:
     """One forward request in the continuous-batching queue.
 
     ``x`` is a single example (shape ``models.cnn.packed_input_shape``,
     uint8); ``deadline`` is the absolute clock time by which the request
-    must be flushed even if the batch is not full.  ``result`` /
-    ``completed_at`` are filled by the flush that served it.
+    must be flushed even if the batch is not full.  ``status`` moves
+    ``pending`` → exactly one of :data:`TERMINAL_STATES`; ``result`` /
+    ``completed_at`` are filled at completion (``result`` stays None and
+    ``error`` carries the exception for non-``ok`` outcomes).
     """
     rid: int
     x: Any
     deadline: float
     submitted_at: float
+    status: str = "pending"
+    error: BaseException | None = None
     result: np.ndarray | None = None
     completed_at: float | None = None
     # tracer-clock stamp (perf_counter_ns) taken at submit when tracing
@@ -74,12 +133,14 @@ class ServeRequest:
 @dataclasses.dataclass(frozen=True)
 class FlushRecord:
     """Per-flush bookkeeping: how many real requests rode which bucket
-    through which dense grid (``route`` ∈ {'gemv', 'gemm'})."""
+    through which dense grid (``route`` ∈ {'gemv', 'gemm'}), and how
+    many retry attempts the dispatch needed (0 on the healthy path)."""
     batch: int
     bucket: int
     route: str
     at: float
     wall_s: float
+    retries: int = 0
 
 
 class PackedModelCache:
@@ -220,6 +281,22 @@ class PackedInferenceServer:
     to the N-major GEMV grid, larger ones to the blocked GEMM / resident
     stack — the ``kernels.ops.dispatch_batch`` seam, recorded per flush
     in ``flushes``.
+
+    Fault tolerance (``docs/robustness.md``): every admitted request
+    reaches exactly ONE terminal state (:data:`TERMINAL_STATES`).  A
+    flush that raises fails only its own window — it is retried under
+    the bounded-backoff :class:`RetryPolicy` and then bisected so a
+    poison request errors alone while its cohort is served; a request
+    whose deadline is exceeded by more than ``timeout_grace`` × its
+    deadline budget completes as ``timeout`` instead of being served
+    stale (``timeout_grace=None``, the default, never times out —
+    deadlines then only drive flush scheduling); a full queue sheds
+    with :class:`BackpressureError`.  ``flush_hook`` is the
+    fault-injection seam (``runtime.faults.FaultInjector``) wrapping
+    the device dispatch of ``_flush_window``; on
+    :class:`DeviceLossError` the window is requeued and the error
+    propagates to the ``runtime.ServingSupervisor``, which degrades the
+    mesh and rebuilds the engine via :meth:`rebuild_engine`.
     """
 
     def __init__(self, *, max_batch: int = 32,
@@ -228,6 +305,9 @@ class PackedInferenceServer:
                  max_queue: int | None = None,
                  completed_mailbox: int = 1024,
                  clock: Callable[[], float] = time.monotonic,
+                 retry: RetryPolicy | None = None,
+                 timeout_grace: float | None = None,
+                 sleep: Callable[[float], Any] | None = None,
                  telemetry: Telemetry | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -241,6 +321,26 @@ class PackedInferenceServer:
         self.default_deadline = default_deadline
         self.max_queue = max_queue
         self._clock = clock
+        self.retry = retry if retry is not None else RetryPolicy()
+        if timeout_grace is not None and timeout_grace < 1.0:
+            raise ValueError(
+                f"timeout_grace must be >= 1 (a multiple of the deadline "
+                f"budget) or None, got {timeout_grace}")
+        self.timeout_grace = timeout_grace
+        # Backoff sleeps must not stall a simulated clock forever: when
+        # the injected clock can advance (SimClock), sleeping IS
+        # advancing it, so retry/backoff stays deterministic in tests.
+        if sleep is not None:
+            self._sleep = sleep
+        elif callable(getattr(clock, "advance", None)):
+            self._sleep = clock.advance
+        else:
+            self._sleep = time.sleep
+        # The fault-injection seam: when set, `_flush_window` routes its
+        # device dispatch through `flush_hook(eng, buf, reqs, default)`
+        # instead of calling `default()` (= `eng.fwd(buf)`) directly.
+        # `runtime.faults.FaultInjector.attach` installs itself here.
+        self.flush_hook: Callable[..., Any] | None = None
         # Per-server telemetry (isolated; tracing off by default — the
         # disabled span path is one attribute check).  The cache and
         # pool write their counters into the SAME registry, so one
@@ -253,6 +353,11 @@ class PackedInferenceServer:
         self._m_cancelled = m.counter("serve.cancelled")
         self._m_rejected = m.counter("serve.rejected")
         self._m_flushes = m.counter("serve.flushes")
+        self._m_errors = m.counter("serve.errors")
+        self._m_retries = m.counter("serve.retries")
+        self._m_timeouts = m.counter("serve.timeouts")
+        self._m_shed = m.counter("serve.shed")
+        self._m_bisections = m.counter("serve.bisections")
         self._m_padded = m.counter("serve.padded_rows")
         self._m_routes = {r: m.counter(f"serve.route.{r}")
                           for r in ("gemv", "gemm")}
@@ -372,6 +477,30 @@ class PackedInferenceServer:
             self._active = None
         return done
 
+    def rebuild_engine(self, key, *, packed=None, params=None, spec=None,
+                       kind: str | None = None, backend: str = "auto",
+                       dense_stack: str = "auto", mesh=None) -> Any:
+        """Drop and rebuild the engine for ``key`` WITHOUT flushing
+        pending work — the elastic-degradation seam.
+
+        ``use``/``invalidate`` force-flush through the OLD engine first;
+        after a device loss that engine's compiled forward can never
+        complete, so the supervisor swaps the engine out from under the
+        queue instead: the cache entry and compiled forwards are
+        dropped, a new engine is built from ``packed`` (typically the
+        warm-restored, resharded tree) on ``mesh``, and the still-queued
+        requests are served by the NEW engine on the next step — zero
+        requests lost.
+        """
+        if key not in self._engines:
+            raise KeyError(f"unknown model key {key!r}")
+        self.cache.invalidate(key)
+        self._engines.pop(key)
+        self._engines[key] = self._build_engine(
+            key, params, spec, kind=kind, packed=packed,
+            backend=backend, dense_stack=dense_stack, mesh=mesh)
+        return key
+
     def engine(self, key=None) -> _Engine:
         """The registered engine for ``key`` (active model if None) —
         read-only introspection for tests, benchmarks, and the sharded
@@ -393,13 +522,15 @@ class PackedInferenceServer:
     def submit(self, x, *, deadline: float | None = None) -> int:
         """Admit one example FIFO; returns its rid.  ``deadline`` is
         seconds from now (``default_deadline`` if None).  Raises
-        ``RuntimeError`` when ``max_queue`` requests are already
-        pending (backpressure — the caller sheds or retries)."""
+        :class:`BackpressureError` when ``max_queue`` requests are
+        already pending — the request is SHED, never admitted (the
+        fourth lifecycle outcome; the caller backs off or retries)."""
         if self._active is None:
             raise RuntimeError("no model registered")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             self._m_rejected.inc()
-            raise RuntimeError(
+            self._m_shed.inc()
+            raise BackpressureError(
                 f"queue full ({self.max_queue} pending) — backpressure")
         now = self._clock()
         dl = self.default_deadline if deadline is None else deadline
@@ -465,7 +596,8 @@ class PackedInferenceServer:
         xs = list(xs)
         if self.max_queue is not None and \
                 len(self._queue) + len(xs) > self.max_queue:
-            raise RuntimeError(
+            self._m_shed.inc(len(xs))
+            raise BackpressureError(
                 f"serve({len(xs)}) would overflow max_queue="
                 f"{self.max_queue} ({len(self._queue)} pending) — "
                 "backpressure")
@@ -473,6 +605,14 @@ class PackedInferenceServer:
         by_rid = {r.rid: r for r in self.flush()}
         for rid in rids:                       # claimed here, not via take()
             self._completed.pop(rid, None)
+        bad = [(rid, by_rid[rid].status) for rid in rids
+               if by_rid[rid].status != "ok"]
+        if bad:
+            # the batch-API view has no per-request status channel, so a
+            # non-ok outcome must raise rather than hand back None rows
+            raise RuntimeError(
+                f"serve(): {len(bad)} request(s) ended non-ok: {bad[:4]}"
+                f"{'...' if len(bad) > 4 else ''}")
         return [np.asarray(by_rid[rid].result) for rid in rids]
 
     def take(self, rid: int) -> ServeRequest | None:
@@ -505,9 +645,123 @@ class PackedInferenceServer:
                 return b
         return eng.buckets[-1]
 
+    def _timed_out(self, r: ServeRequest, now: float) -> bool:
+        """Deadline exceeded past the grace factor: the request is
+        completed as ``timeout`` instead of served stale.  Grace is a
+        multiple of the request's own deadline BUDGET (submit → flush
+        deadline), so a 5 ms-deadline request with grace 4 times out
+        20 ms after submission; ``timeout_grace=None`` disables."""
+        if self.timeout_grace is None:
+            return False
+        budget = max(r.deadline - r.submitted_at, 0.0)
+        return now > r.submitted_at + self.timeout_grace * budget
+
+    def _finish(self, r: ServeRequest, status: str, now: float, *,
+                result=None, error: BaseException | None = None) -> None:
+        """Move one request to its terminal state — the ONLY writer of
+        ``status``, so 'exactly one terminal state per rid' holds by
+        construction (re-finishing a finished request is a bug)."""
+        assert status in TERMINAL_STATES, status
+        assert r.status == "pending", (r.rid, r.status, status)
+        r.status = status
+        r.result = result
+        r.error = error
+        r.completed_at = now
+        self._h_latency.observe(r.latency)
+        if status == "ok":
+            self._m_completed.inc()
+        elif status == "timeout":
+            self._m_timeouts.inc()
+        else:
+            self._m_errors.inc()
+        self.served.append(r)
+        del self.served[:-self._completed_cap]
+        self._completed[r.rid] = r
+        while len(self._completed) > self._completed_cap:
+            self._completed.popitem(last=False)
+
+    def _dispatch(self, eng: _Engine, buf, reqs: list[ServeRequest]):
+        """The flush seam: everything device-side of one dispatch
+        attempt.  ``flush_hook`` (fault injection, chaos testing) wraps
+        the default ``eng.fwd(buf)`` call when installed."""
+        if self.flush_hook is not None:
+            return self.flush_hook(eng, buf, reqs, lambda: eng.fwd(buf))
+        return eng.fwd(buf)
+
+    def _serve_cohort(self, reqs: list[ServeRequest],
+                      eng: _Engine) -> list[ServeRequest]:
+        """Serve one cohort: pad to its bucket, dispatch with bounded
+        retry/backoff, bisect on persistent failure, complete every
+        request terminally.  Failure isolation contract:
+
+        * an exception from the dispatch fails only THIS cohort — it is
+          retried ``retry.max_retries`` times with exponential backoff,
+          then the cohort bisects (fresh budget per half) until the
+          poison singleton completes as ``error`` while its former
+          cohort-mates are served;
+        * :class:`DeviceLossError` short-circuits all of that: the
+          cohort goes back to the FRONT of the queue and the error
+          propagates to the supervisor (mesh shrink + engine rebuild),
+          after which the requeued requests are served by the new
+          engine.
+        """
+        tr = self.telemetry.tracer
+        bucket = self._bucket_for(eng, len(reqs))
+        t0 = self._clock()
+        with tr.span("serve.pack", batch=len(reqs), bucket=bucket):
+            buf = self.pool.batch_buffer(bucket, eng.example_shape)
+            for i, r in enumerate(reqs):
+                buf[i] = np.asarray(r.x, buf.dtype)
+            buf[len(reqs):] = 0
+        route = kops.dispatch_batch(bucket, eng.kw_words)
+        attempt = 0
+        while True:
+            try:
+                with tr.span("serve.dispatch", route=route):
+                    out_dev = self._dispatch(eng, buf, reqs)
+                with tr.span("serve.compute"):
+                    out = np.asarray(out_dev)   # blocks on device work
+                break
+            except DeviceLossError:
+                self._queue.extendleft(reversed(reqs))
+                self._m_depth.set(len(self._queue))
+                raise
+            except Exception as e:
+                if attempt < self.retry.max_retries:
+                    attempt += 1
+                    self._m_retries.inc()
+                    self._sleep(self.retry.backoff(attempt))
+                    continue
+                if len(reqs) == 1:
+                    with tr.span("serve.complete"):
+                        self._finish(reqs[0], "error", self._clock(),
+                                     error=e)
+                        self._m_depth.set(len(self._queue))
+                    return list(reqs)
+                self._m_bisections.inc()
+                mid = len(reqs) // 2
+                return (self._serve_cohort(reqs[:mid], eng) +
+                        self._serve_cohort(reqs[mid:], eng))
+        with tr.span("serve.complete"):
+            now = self._clock()
+            for i, r in enumerate(reqs):
+                self._h_wait.observe(max(0.0, t0 - r.submitted_at))
+                self._finish(r, "ok", now, result=out[i])
+            self.flushes.append(FlushRecord(
+                batch=len(reqs), bucket=bucket, route=route,
+                at=now, wall_s=now - t0, retries=attempt))
+            del self.flushes[:-self._completed_cap]
+            self._m_flushes.inc()
+            self._m_routes[route].inc()
+            self._m_padded.inc(bucket - len(reqs))
+            self._m_depth.set(len(self._queue))
+            self._h_flush.observe(now - t0)
+        return list(reqs)
+
     def _flush_window(self, limit: int) -> list[ServeRequest]:
-        """One flush: pop a FIFO window, pad to its bucket, run the
-        compiled forward, complete the requests.
+        """One flush: pop a FIFO window, triage expired requests to
+        ``timeout``, then serve the live cohort (`_serve_cohort` does
+        pad → dispatch-with-retry → complete, bisecting on failure).
 
         The serving lifecycle is traced per phase when the server's
         tracer is enabled (span taxonomy in ``docs/observability.md``):
@@ -516,8 +770,9 @@ class PackedInferenceServer:
         ``serve.compute`` (host transfer blocks on device work) →
         ``serve.complete``, plus one explicit-time ``serve.queue_wait``
         span per request (submit → flush start).  Metrics (queue-wait /
-        latency / flush-wall histograms, route + padded-row counters)
-        update unconditionally — they are a few dict ops per flush.
+        latency / flush-wall histograms, route + padded-row + lifecycle
+        counters) update unconditionally — they are a few dict ops per
+        flush.
         """
         tr = self.telemetry.tracer
         flush_t0 = tr.now_ns() if tr.enabled else 0
@@ -527,50 +782,32 @@ class PackedInferenceServer:
             if not reqs:
                 return []
             eng = self._active_engine()
-            bucket = self._bucket_for(eng, len(reqs))
-            t0 = self._clock()
-            buf = self.pool.batch_buffer(bucket, eng.example_shape)
+            now = self._clock()
         if tr.enabled:
             for r in reqs:
                 if r.trace_submit_ns is not None:
                     tr.add_complete("serve.queue_wait", r.trace_submit_ns,
                                     flush_t0, rid=r.rid)
-        with tr.span("serve.pack", batch=len(reqs), bucket=bucket):
-            for i, r in enumerate(reqs):
-                buf[i] = np.asarray(r.x, buf.dtype)
-            buf[len(reqs):] = 0
-        route = kops.dispatch_batch(bucket, eng.kw_words)
-        with tr.span("serve.dispatch", route=route):
-            out_dev = eng.fwd(buf)          # ONE host round-trip per flush
-        with tr.span("serve.compute"):
-            out = np.asarray(out_dev)       # blocks on device completion
-        with tr.span("serve.complete"):
-            now = self._clock()
-            for i, r in enumerate(reqs):
-                r.result = out[i]
-                r.completed_at = now
-                self._h_wait.observe(max(0.0, t0 - r.submitted_at))
-                self._h_latency.observe(r.latency)
-            self.flushes.append(FlushRecord(
-                batch=len(reqs), bucket=bucket, route=route,
-                at=now, wall_s=now - t0))
-            self._m_flushes.inc()
-            self._m_routes[route].inc()
-            self._m_padded.inc(bucket - len(reqs))
-            self._m_completed.inc(len(reqs))
+        done: list[ServeRequest] = []
+        live: list[ServeRequest] = []
+        for r in reqs:
+            if self._timed_out(r, now):
+                self._finish(r, "timeout", now)
+                done.append(r)
+            else:
+                live.append(r)
+        flush_args: dict = {"batch": len(reqs)}
+        if not live:
             self._m_depth.set(len(self._queue))
-            self._h_flush.observe(now - t0)
-            self.served += reqs
-            del self.served[:-self._completed_cap]
-            del self.flushes[:-self._completed_cap]
-            for r in reqs:
-                self._completed[r.rid] = r
-            while len(self._completed) > self._completed_cap:
-                self._completed.popitem(last=False)
+        else:
+            bucket = self._bucket_for(eng, len(live))
+            flush_args["bucket"] = bucket
+            flush_args["route"] = kops.dispatch_batch(bucket, eng.kw_words)
+            done += self._serve_cohort(live, eng)
         if tr.enabled:
             tr.add_complete("serve.flush", flush_t0, tr.now_ns(),
-                            batch=len(reqs), bucket=bucket, route=route)
-        return reqs
+                            **flush_args)
+        return done
 
 
 def latency_percentile(sorted_vals, q: float):

@@ -143,8 +143,77 @@ def test_supervisor_metrics_mirror_report(tmp_path):
     assert sup2.metrics.value("supervisor.heartbeats") == r2.heartbeats
 
 
+def test_async_checkpointer_surfaces_worker_failure(tmp_path):
+    """A save that raises in the background thread is re-raised from
+    wait() — and from the NEXT save() — instead of being silently lost
+    (the supervisor must not believe a checkpoint landed when it
+    didn't)."""
+    bad = tmp_path / "not_a_dir"
+    bad.write_text("")                 # ckpt_dir is a FILE: makedirs raises
+    ck = AsyncCheckpointer(str(bad))
+    tree = _tree(jax.random.PRNGKey(3))
+    ck.save(1, tree)                   # starts the doomed worker
+    with pytest.raises(OSError):
+        ck.wait()
+    # the error is delivered exactly once; the checkpointer is reusable
+    ck.wait()
+    ck.save(2, tree)
+    with pytest.raises(OSError):
+        ck.save(3, tree)               # save() waits first -> re-raises
+
+
+def test_supervisor_straggler_redispatch_applies_step_once(tmp_path):
+    """Regression: the speculative re-dispatch must rerun step i from
+    the PRE-step state.  With a counting step function the final state
+    equals the step count even though one step ran twice (the double-
+    apply bug made x == steps + 1)."""
+    import time
+    calls = {"n": 0}
+
+    def init_state():
+        return {"x": jnp.float32(0)}
+
+    def step_fn(state, i):
+        calls["n"] += 1
+        if i == 5 and calls["n"] == 6:
+            time.sleep(0.15)          # straggler: first attempt only
+        return {"x": state["x"] + 1}, {}
+
+    cfg = SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                           min_deadline_s=0.05, deadline_factor=2.0)
+    sup = Supervisor(cfg, init_state, step_fn)
+    state, report = sup.run(8)
+    assert report.stragglers_redispatched >= 1
+    assert calls["n"] == 8 + report.stragglers_redispatched
+    # every step applied exactly once, re-dispatches included
+    assert float(state["x"]) == 8.0
+
+
 def test_remesh_plan():
     assert remesh_plan(256, prefer_model=16).shape == (16, 16)
     assert remesh_plan(192, prefer_model=16).shape == (12, 16)
-    # model axis halves when it no longer divides
+    # largest power-of-two divisor <= prefer_model when it no longer
+    # divides
     assert remesh_plan(24, prefer_model=16).shape == (3, 8)
+
+
+def test_remesh_plan_non_power_of_two_survivors():
+    """Non-pow2 survivor counts (6, 3 devices): the model degree drops
+    to the largest power-of-two divisor, down to 1 for odd counts."""
+    assert remesh_plan(6, prefer_model=4).shape == (3, 2)
+    assert remesh_plan(6, prefer_model=2).shape == (3, 2)   # 2 divides 6
+    assert remesh_plan(3, prefer_model=4).shape == (3, 1)
+    assert remesh_plan(1, prefer_model=8).shape == (1, 1)
+    # the degree never grows past prefer_model on a shrink
+    assert remesh_plan(8, prefer_model=2).shape == (4, 2)
+
+
+def test_remesh_plan_validation():
+    with pytest.raises(ValueError, match="n_devices"):
+        remesh_plan(0, prefer_model=2)
+    with pytest.raises(ValueError, match="n_devices"):
+        remesh_plan(-4, prefer_model=2)
+    with pytest.raises(ValueError, match="prefer_model"):
+        remesh_plan(4, prefer_model=0)
+    with pytest.raises(ValueError, match="min_model"):
+        remesh_plan(6, prefer_model=4, min_model=4)

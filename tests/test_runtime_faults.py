@@ -1,0 +1,391 @@
+"""Fault-tolerant serving: the injection matrix, request lifecycle
+semantics under SimClock, elastic degradation, packed checkpoints.
+
+The fault matrix (transient / persistent / poison / device_loss / slow)
+runs in-process on a single device — the 8-device shrunken-mesh
+bit-exactness cell rides ``distributed/verify_sharded.py`` (the
+``degrade`` cell), which ``tests/test_sharded_forward.py`` runs as a
+subprocess.  Every scenario here asserts the two invariants the chaos
+CI job enforces end-to-end: each admitted request reaches exactly one
+terminal state, and the server keeps serving afterwards.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_packed_checkpoint,
+                              save_packed_checkpoint)
+from repro.models import cnn
+from repro.runtime import (FaultInjector, FaultPlan, FaultSpec,
+                           ServingSupervisor)
+from repro.runtime.faults import (PersistentFlushError, PoisonRequestError,
+                                  TransientFlushError)
+from repro.train import serve as SV
+
+SIZES = (64, 64, 10)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    spec = cnn.BMLPSpec(sizes=SIZES)
+    params = cnn.init_bmlp(jax.random.PRNGKey(0), spec)
+    return cnn.pack_bmlp(params, spec)
+
+
+@pytest.fixture(scope="module")
+def batch(packed):
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (8, SIZES[0]),
+                                      0, 256), np.uint8)
+    want = np.asarray(cnn.bmlp_forward_packed(packed, x, backend="jnp"))
+    return x, want
+
+
+def mk_server(packed, plan=None, **kw):
+    clock = SV.SimClock()
+    srv = SV.PackedInferenceServer(max_batch=8, default_deadline=0.005,
+                                   clock=clock, **kw)
+    srv.register("m", packed=packed, backend="jnp")
+    inj = FaultInjector(plan).attach(srv) if plan is not None else None
+    return srv, clock, inj
+
+
+def submit_all(srv, x, idx):
+    return [srv.submit(x[i]) for i in idx]
+
+
+def assert_serves_after(srv, clock, x, want):
+    """The post-fault invariant: a clean follow-up wave completes ok and
+    bit-exact (the fault did not wedge the queue or the engine)."""
+    srv.flush_hook = None
+    rids = submit_all(srv, x, range(4))
+    clock.advance(0.006)     # past deadline, inside any grace window
+    done = {r.rid: r for r in srv.step()}
+    assert [done[r].status for r in rids] == ["ok"] * 4
+    got = np.stack([done[r].result for r in rids])
+    np.testing.assert_array_equal(got, want[:4])
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retried_to_ok(packed, batch):
+    """A dispatch failure inside the retry budget is invisible to the
+    caller: all ok, retries counted, FlushRecord carries the attempts."""
+    x, want = batch
+    srv, clock, inj = mk_server(
+        packed, FaultPlan.of(FaultSpec("transient", times=2)))
+    rids = submit_all(srv, x, range(8))
+    done = {r.rid: r for r in srv.step()}
+    assert [done[r].status for r in rids] == ["ok"] * 8
+    np.testing.assert_array_equal(
+        np.stack([done[r].result for r in rids]), want)
+    m = srv.telemetry.metrics
+    assert m.value("serve.retries") == 2
+    assert m.value("serve.errors") == 0
+    assert srv.flushes[-1].retries == 2
+    assert isinstance(inj.injected[0]["kind"], str)
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_transient_beyond_budget_errors_cohort(packed, batch):
+    """times > max_retries on a singleton: retries exhaust, the request
+    completes as error carrying the LAST exception."""
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("transient", times=99)),
+        retry=SV.RetryPolicy(max_retries=1))
+    rid = srv.submit(x[0])
+    clock.advance(1.0)
+    done = srv.step()
+    assert [r.status for r in done] == ["error"]
+    assert isinstance(done[0].error, TransientFlushError)
+    assert done[0].result is None
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_poison_request_isolated_by_bisection(packed, batch):
+    """One poison rid errors ALONE; its 7 cohort-mates serve bit-exact;
+    bisection (not blanket retry) is what found it."""
+    x, want = batch
+    srv, clock, _ = mk_server(packed,
+                              FaultPlan.of(FaultSpec("poison", rid=3)))
+    rids = submit_all(srv, x, range(8))
+    done = {r.rid: r for r in srv.step()}
+    assert done[3].status == "error"
+    assert isinstance(done[3].error, PoisonRequestError)
+    ok = [r for r in rids if r != 3]
+    assert all(done[r].status == "ok" for r in ok)
+    np.testing.assert_array_equal(
+        np.stack([done[r].result for r in ok]),
+        want[[i for i in range(8) if i != 3]])
+    m = srv.telemetry.metrics
+    assert m.value("serve.bisections") > 0
+    assert m.value("serve.errors") == 1
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_persistent_fault_fails_only_its_cohort(packed, batch):
+    """A never-healing flush errors its whole window (after retries and
+    bisection drain), but traffic admitted AFTER the fault is clean —
+    failure isolation, the server does not die."""
+    x, want = batch
+    srv, clock, _ = mk_server(packed,
+                              FaultPlan.of(FaultSpec("persistent")))
+    rids = submit_all(srv, x, range(4))
+    clock.advance(1.0)
+    done = {r.rid: r for r in srv.step()}
+    assert [done[r].status for r in rids] == ["error"] * 4
+    assert all(isinstance(done[r].error, PersistentFlushError)
+               for r in rids)
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_slow_flush_ages_queue_into_timeout(packed, batch):
+    """The slow flush itself completes (its window was already triaged),
+    but requests queued behind it age past timeout_grace and complete
+    as timeout — not served stale."""
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("slow", delay_s=1.0)),
+        timeout_grace=2.0)
+    first = submit_all(srv, x, range(4))
+    clock.advance(0.006)                 # past deadline, inside grace
+    done = {r.rid: r for r in srv.step()}   # 1 s clock jump inside
+    assert [done[r].status for r in first] == ["ok"] * 4
+    late = submit_all(srv, x, range(4, 8))
+    clock.advance(0.100)                 # grace is 10 ms: way past
+    done2 = {r.rid: r for r in srv.step()}
+    assert [done2[r].status for r in late] == ["timeout"] * 4
+    assert all(done2[r].result is None for r in late)
+    assert srv.telemetry.metrics.value("serve.timeouts") == 4
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_device_loss_degrades_and_serves_requeued(packed, batch):
+    """Injected device loss: the window is requeued (zero lost), the
+    supervisor remeshes onto the survivors and the SAME rids complete
+    ok and bit-exact on the rebuilt engine."""
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("device_loss", survivors=1)))
+    sup = ServingSupervisor(srv, "m", backend="jnp")
+    rids = submit_all(srv, x, range(8))
+    done = {r.rid: r for r in sup.step()}
+    assert [done[r].status for r in rids] == ["ok"] * 8
+    np.testing.assert_array_equal(
+        np.stack([done[r].result for r in rids]), want)
+    assert sup.events == [sup.events[0]]
+    assert sup.events[0].requeued == 8
+    assert sup.events[0].mesh_shape == (1, 1)
+    m = srv.telemetry.metrics
+    assert m.value("serve.degraded") == 1
+    assert m.value("serve.degraded_state") == 0
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_device_loss_warm_restores_from_checkpoint(packed, batch, tmp_path):
+    """With a ckpt_dir and a healthy-path checkpoint, degrade restores
+    the packed tree from disk (reshard-on-restore), not the live tree."""
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("device_loss", survivors=1)))
+    sup = ServingSupervisor(srv, "m", ckpt_dir=str(tmp_path),
+                            backend="jnp")
+    assert sup.checkpoint() is not None
+    assert latest_step(str(tmp_path)) == 0
+    rids = submit_all(srv, x, range(8))
+    done = {r.rid: r for r in sup.step()}
+    assert all(done[r].status == "ok" for r in rids)
+    np.testing.assert_array_equal(
+        np.stack([done[r].result for r in rids]), want)
+    assert sup.events[0].restored_from == "checkpoint"
+
+
+def test_every_fault_kind_reaches_exactly_one_terminal_state(packed, batch):
+    """The matrix invariant, all five kinds in one scripted run: every
+    admitted rid ends in exactly one of TERMINAL_STATES and the
+    mailbox agrees with the step() returns."""
+    x, want = batch
+    submitted, finished = [], {}
+
+    def drive(plan, n, supervised=None, advance=1.0, **kw):
+        srv, clock, _ = mk_server(packed, plan, **kw)
+        sup = supervised and ServingSupervisor(srv, "m", backend="jnp")
+        rids = submit_all(srv, x, range(n))
+        clock.advance(advance)
+        stepper = sup.step if sup else srv.step
+        done = list(stepper())
+        while srv.pending():
+            clock.advance(advance)
+            done += stepper()
+        return rids, {r.rid: r for r in done}
+
+    cases = [
+        (FaultPlan.of(FaultSpec("transient", times=1)), {}, {}),
+        (FaultPlan.of(FaultSpec("persistent")), {}, {}),
+        (FaultPlan.of(FaultSpec("poison", rid=2)), {}, {}),
+        (FaultPlan.of(FaultSpec("device_loss", survivors=1)),
+         {"supervised": True}, {}),
+        (FaultPlan.of(FaultSpec("slow", delay_s=1.0)),
+         {}, {"timeout_grace": 2.0}),
+    ]
+    for plan, drive_kw, srv_kw in cases:
+        rids, done = drive(plan, 8, **drive_kw, **srv_kw)
+        for rid in rids:
+            assert rid in done, (plan, rid)
+            assert done[rid].status in SV.TERMINAL_STATES, (plan, rid)
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle semantics under SimClock (satellite)
+# ---------------------------------------------------------------------------
+
+def test_deadline_exceeded_completes_as_timeout(packed, batch):
+    """A request whose deadline budget is exceeded by more than the
+    grace factor is NEVER dispatched — it completes as timeout with no
+    result, and the flush serves only the live cohort."""
+    x, want = batch
+    srv, clock, _ = mk_server(packed, timeout_grace=2.0)
+    stale = srv.submit(x[0])             # budget 5 ms, grace cutoff 10 ms
+    clock.advance(0.050)
+    fresh = srv.submit(x[1])
+    clock.advance(0.001)
+    done = {r.rid: r for r in srv.step()}
+    assert done[stale].status == "timeout"
+    assert done[stale].result is None
+    assert done[stale].error is None
+    assert done[fresh].status == "ok"
+    np.testing.assert_array_equal(done[fresh].result, want[1])
+
+
+def test_no_grace_means_no_timeouts(packed, batch):
+    """timeout_grace=None (default): deadlines only schedule flushes —
+    an ancient request is still served (the pre-existing contract)."""
+    x, want = batch
+    srv, clock, _ = mk_server(packed)
+    rid = srv.submit(x[0])
+    clock.advance(1000.0)
+    done = {r.rid: r for r in srv.step()}
+    assert done[rid].status == "ok"
+
+
+def test_full_queue_sheds_with_typed_error(packed, batch):
+    x, _ = batch
+    srv, clock, _ = mk_server(packed, max_queue=2)
+    srv.submit(x[0]); srv.submit(x[1])
+    with pytest.raises(SV.BackpressureError):
+        srv.submit(x[2])
+    # batch API: all-or-nothing, same typed error
+    with pytest.raises(SV.BackpressureError):
+        srv.serve([x[2], x[3]])
+    assert srv.telemetry.metrics.value("serve.shed") == 3
+    assert srv.pending() == 2            # nothing half-admitted
+
+
+def test_cancel_after_error_is_idempotent_noop(packed, batch):
+    """cancel() is an eviction of QUEUED work; once a request reached a
+    terminal state it returns False, repeatedly, and does not disturb
+    the mailbox entry."""
+    x, _ = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("transient", times=99)),
+        retry=SV.RetryPolicy(max_retries=0))
+    rid = srv.submit(x[0])
+    clock.advance(1.0)
+    (req,) = srv.step()
+    assert req.status == "error"
+    assert srv.cancel(rid) is False
+    assert srv.cancel(rid) is False
+    assert srv.telemetry.metrics.value("serve.cancelled") == 0
+    assert srv.take(rid) is req          # mailbox entry intact
+
+
+def test_take_of_failed_rid_returns_error_status(packed, batch):
+    x, _ = batch
+    srv, clock, _ = mk_server(packed,
+                              FaultPlan.of(FaultSpec("poison", rid=0)))
+    rid = srv.submit(x[0])
+    clock.advance(1.0)
+    srv.step()
+    got = srv.take(rid)
+    assert got is not None and got.rid == rid
+    assert got.status == "error"
+    assert isinstance(got.error, PoisonRequestError)
+    assert srv.take(rid) is None         # claimed exactly once
+
+
+def test_serve_raises_on_non_ok_outcomes(packed, batch):
+    """The batch API has no per-request status channel, so a non-ok
+    outcome raises instead of returning None rows."""
+    x, _ = batch
+    srv, clock, _ = mk_server(packed,
+                              FaultPlan.of(FaultSpec("poison", rid=1)))
+    with pytest.raises(RuntimeError, match="non-ok"):
+        srv.serve([x[0], x[1], x[2]])
+
+
+# ---------------------------------------------------------------------------
+# harness plumbing
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("meteor")
+    with pytest.raises(ValueError, match="rid"):
+        FaultSpec("poison")
+    with pytest.raises(ValueError, match="survivor"):
+        FaultSpec("device_loss")
+
+
+def test_injector_counts_in_server_registry(packed, batch):
+    x, _ = batch
+    srv, clock, _ = mk_server(
+        packed, FaultPlan.of(FaultSpec("transient", times=2)))
+    submit_all(srv, x, range(8))
+    srv.step()
+    assert srv.telemetry.metrics.value("faults.injected.transient") == 2
+
+
+def test_timeout_grace_validation(packed):
+    with pytest.raises(ValueError, match="timeout_grace"):
+        SV.PackedInferenceServer(max_batch=4, timeout_grace=0.5)
+
+
+# ---------------------------------------------------------------------------
+# packed checkpoints
+# ---------------------------------------------------------------------------
+
+def test_packed_checkpoint_roundtrip_bcnn(tmp_path):
+    """Mixed-tree round trip: array leaves (incl. pool-mask words)
+    restored bit-exact, statics (spec dataclass, geometry ints, None
+    masks) grafted from the template — and the restored tree serves the
+    same rows."""
+    spec = cnn.BCNNSpec(input_hw=(8, 8), c_in=3,
+                        stages=(cnn.ConvStage(64),
+                                cnn.ConvStage(48, pool=True)),
+                        dense=(64, 10))
+    params = cnn.init_bcnn(jax.random.PRNGKey(0), spec)
+    packed = cnn.pack_bcnn(params, spec)
+    save_packed_checkpoint(str(tmp_path), 3, packed)
+    assert latest_step(str(tmp_path)) == 3
+    # template from the SAME config but different (wrong) weights
+    params2 = cnn.init_bcnn(jax.random.PRNGKey(9), spec)
+    template = cnn.pack_bcnn(params2, spec)
+    restored, meta = load_packed_checkpoint(str(tmp_path), 3, template)
+    assert meta["extra"]["packed_kind"] == "bcnn"
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 8, 8, 3),
+                                      0, 256), np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(cnn.bcnn_forward_packed(restored, x, backend="jnp")),
+        np.asarray(cnn.bcnn_forward_packed(packed, x, backend="jnp")))
+
+
+def test_packed_checkpoint_kind_mismatch(tmp_path, packed):
+    save_packed_checkpoint(str(tmp_path), 0, packed)
+    spec = cnn.BCNNSpec(input_hw=(8, 8), c_in=3,
+                        stages=(cnn.ConvStage(64),), dense=(64, 10))
+    template = cnn.pack_bcnn(cnn.init_bcnn(jax.random.PRNGKey(0), spec),
+                             spec)
+    with pytest.raises(ValueError, match="kind"):
+        load_packed_checkpoint(str(tmp_path), 0, template)
