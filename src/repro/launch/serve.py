@@ -83,9 +83,14 @@ def run_chaos(args) -> None:
     5. ``device_loss`` — 8 -> 4 devices: elastic degrade (remesh +
        packed-checkpoint warm restore + engine rebuild under the
        queue), requeued wave served ``ok`` and bit-exact.
-    6. ``shed``        — queue filled to ``max_queue``; the next submit
+    6. ``device_loss@bisect`` — the loss OVERLAPS bisection: a poison
+       rid splits the cohort, the loss strikes a clean bisected half,
+       and the not-yet-dispatched siblings must requeue too (the
+       whole-window requeue regression); degrade 4 -> 2, poison
+       ``error``, everything else ``ok``.
+    7. ``shed``        — queue filled to ``max_queue``; the next submit
        raises the typed ``BackpressureError``.
-    7. ``recovery``    — a clean wave on the degraded mesh: all ``ok``,
+    8. ``recovery``    — a clean wave on the degraded mesh: all ``ok``,
        bit-exact, degraded gauge back at 0.
 
     Exits non-zero if any invariant fails (the CI chaos job's gate):
@@ -153,7 +158,7 @@ def run_chaos(args) -> None:
                        "injected": list(inj.injected) if inj else []})
         return [finished.get(rid) for rid, _ in wave_rids]
 
-    print("chaos drill: 7 phases on a (4,2) mesh, SimClock-driven")
+    print("chaos drill: 8 phases on a (4,2) mesh, SimClock-driven")
     wave(8, plan=FaultPlan.of(FaultSpec("transient", times=2)),
          phase="transient")
     poison_rid = len(submitted) + 3
@@ -165,6 +170,17 @@ def run_chaos(args) -> None:
     wave(4, plan=None, advance=0.400, phase="slow-aftermath(timeout)")
     wave(8, plan=FaultPlan.of(FaultSpec("device_loss", survivors=4)),
          supervised=True, phase="device_loss")
+    # device loss overlapping bisection: with the default 3-attempt
+    # budget, dispatches 0-2 fail on the full poisoned cohort and 3-5 on
+    # its poisoned first half, so dispatch 6 is the first CLEAN bisected
+    # pair — the armed loss fires there, with the poison pair and the
+    # whole second half never dispatched.  Zero-lost then requires the
+    # whole-window requeue (a per-half requeue loses the siblings).
+    poison_rid2 = len(submitted) + 3
+    wave(8, plan=FaultPlan.of(
+            FaultSpec("poison", rid=poison_rid2),
+            FaultSpec("device_loss", survivors=2, at_dispatch=6)),
+         supervised=True, phase="device_loss@bisect")
     # shed: fill the queue to max_queue, the next submit must raise
     srv.flush_hook = None
     shed_rids = [srv.submit(xs[i % 16]) for i in range(16)]
@@ -194,7 +210,7 @@ def run_chaos(args) -> None:
         "errors>0": m.value("serve.errors") > 0,
         "timeouts>0": m.value("serve.timeouts") > 0,
         "shed>0": m.value("serve.shed") > 0,
-        "degraded==1": m.value("serve.degraded") == 1,
+        "degraded==2": m.value("serve.degraded") == 2,
         "degraded_state==0": m.value("serve.degraded_state") == 0,
         "zero_lost": not lost,
         "all_waves_bitexact": all(p["bitexact"] for p in report),
@@ -202,9 +218,10 @@ def run_chaos(args) -> None:
             r.status == "ok" for r in finished.values()
             if r.rid in submitted[-8:]),
         "ckpt_restore": bool(sup.events
-                             and sup.events[0].restored_from == "checkpoint"),
-        "survivor_mesh": bool(sup.events
-                              and sup.events[0].mesh_shape == (2, 2)),
+                             and all(e.restored_from == "checkpoint"
+                                     for e in sup.events)),
+        "survivor_mesh": ([e.mesh_shape for e in sup.events]
+                          == [(2, 2), (1, 2)]),
     }
     for p in report:
         print(f"  {p['phase']:26s} {p['statuses']}"

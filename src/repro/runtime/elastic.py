@@ -32,12 +32,15 @@ def remesh_plan(n_devices: int, *, prefer_model: int,
     model-parallel degree at ``prefer_model`` when it divides, else the
     largest power-of-two divisor of ``n_devices`` that is
     ``<= prefer_model`` (clamped to ``>= min_model``).  The degree never
-    *grows* on a shrink — growing TP would re-layout every packed weight
-    word instead of just the data axis.
+    *grows* past ``prefer_model`` on a shrink — growing TP would
+    re-layout every packed weight word instead of just the data axis —
+    so ``min_model`` must be ``<= prefer_model``.
 
     Raises ``ValueError`` for a non-positive device count (an empty
     survivor set has no mesh — the supervisor must escalate, not serve),
-    or when ``min_model`` cannot be honored.
+    when ``min_model > prefer_model`` (honoring it would grow the
+    degree), or when ``min_model`` cannot be honored because it does
+    not divide ``n_devices``.
     """
     if n_devices < 1:
         raise ValueError(f"n_devices must be >= 1, got {n_devices}")
@@ -45,14 +48,21 @@ def remesh_plan(n_devices: int, *, prefer_model: int,
         raise ValueError(
             f"prefer_model/min_model must be >= 1, got "
             f"{prefer_model}/{min_model}")
+    if min_model > prefer_model:
+        raise ValueError(
+            f"min_model={min_model} exceeds prefer_model={prefer_model} "
+            f"— honoring it would grow the model degree on a shrink")
     if n_devices % prefer_model == 0:
         model = prefer_model
     else:
         model = 1
         while model * 2 <= prefer_model and n_devices % (model * 2) == 0:
             model *= 2
-    model = max(model, min_model)
-    if n_devices % model:
-        raise ValueError(
-            f"min_model={min_model} does not divide n_devices={n_devices}")
+    if model < min_model:
+        if n_devices % min_model:
+            raise ValueError(
+                f"cannot honor min_model={min_model}: it does not divide "
+                f"n_devices={n_devices} (largest divisor <= "
+                f"prefer_model={prefer_model} is {model})")
+        model = min_model
     return MeshPlan((n_devices // model, model), ("data", "model"))

@@ -596,6 +596,7 @@ class PackedInferenceServer:
         xs = list(xs)
         if self.max_queue is not None and \
                 len(self._queue) + len(xs) > self.max_queue:
+            self._m_rejected.inc(len(xs))   # same pair submit() bumps
             self._m_shed.inc(len(xs))
             raise BackpressureError(
                 f"serve({len(xs)}) would overflow max_queue="
@@ -650,10 +651,17 @@ class PackedInferenceServer:
         completed as ``timeout`` instead of served stale.  Grace is a
         multiple of the request's own deadline BUDGET (submit → flush
         deadline), so a 5 ms-deadline request with grace 4 times out
-        20 ms after submission; ``timeout_grace=None`` disables."""
+        20 ms after submission; ``timeout_grace=None`` disables.
+
+        A non-positive budget (``submit(x, deadline=0)`` means "flush
+        me NOW", not "time me out now") would make ANY later flush a
+        timeout under a wall clock, so it falls back to the server's
+        ``default_deadline`` as the grace base."""
         if self.timeout_grace is None:
             return False
-        budget = max(r.deadline - r.submitted_at, 0.0)
+        budget = r.deadline - r.submitted_at
+        if budget <= 0.0:
+            budget = self.default_deadline
         return now > r.submitted_at + self.timeout_grace * budget
 
     def _finish(self, r: ServeRequest, status: str, now: float, *,
@@ -699,12 +707,28 @@ class PackedInferenceServer:
           then the cohort bisects (fresh budget per half) until the
           poison singleton completes as ``error`` while its former
           cohort-mates are served;
-        * :class:`DeviceLossError` short-circuits all of that: the
-          cohort goes back to the FRONT of the queue and the error
-          propagates to the supervisor (mesh shrink + engine rebuild),
-          after which the requeued requests are served by the new
-          engine.
+        * :class:`DeviceLossError` short-circuits all of that: EVERY
+          still-pending request of the cohort goes back to the FRONT of
+          the queue — including bisection siblings that were never
+          dispatched, at any recursion depth — and the error propagates
+          to the supervisor (mesh shrink + engine rebuild), after which
+          the requeued requests are served by the new engine.
+
+        The requeue lives HERE, on the outermost cohort, not inside the
+        bisection recursion: a per-half requeue would save only the half
+        that was dispatching and silently lose its not-yet-dispatched
+        siblings (no terminal state, ``take()`` returns None forever).
         """
+        try:
+            return self._dispatch_cohort(reqs, eng)
+        except DeviceLossError:
+            pending = [r for r in reqs if r.status == "pending"]
+            self._queue.extendleft(reversed(pending))
+            self._m_depth.set(len(self._queue))
+            raise
+
+    def _dispatch_cohort(self, reqs: list[ServeRequest],
+                         eng: _Engine) -> list[ServeRequest]:
         tr = self.telemetry.tracer
         bucket = self._bucket_for(eng, len(reqs))
         t0 = self._clock()
@@ -723,9 +747,7 @@ class PackedInferenceServer:
                     out = np.asarray(out_dev)   # blocks on device work
                 break
             except DeviceLossError:
-                self._queue.extendleft(reversed(reqs))
-                self._m_depth.set(len(self._queue))
-                raise
+                raise        # not batch-local: _serve_cohort requeues
             except Exception as e:
                 if attempt < self.retry.max_retries:
                     attempt += 1
@@ -740,8 +762,8 @@ class PackedInferenceServer:
                     return list(reqs)
                 self._m_bisections.inc()
                 mid = len(reqs) // 2
-                return (self._serve_cohort(reqs[:mid], eng) +
-                        self._serve_cohort(reqs[mid:], eng))
+                return (self._dispatch_cohort(reqs[:mid], eng) +
+                        self._dispatch_cohort(reqs[mid:], eng))
         with tr.span("serve.complete"):
             now = self._clock()
             for i, r in enumerate(reqs):

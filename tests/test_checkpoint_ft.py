@@ -206,6 +206,9 @@ def test_remesh_plan_non_power_of_two_survivors():
     assert remesh_plan(1, prefer_model=8).shape == (1, 1)
     # the degree never grows past prefer_model on a shrink
     assert remesh_plan(8, prefer_model=2).shape == (4, 2)
+    # min_model <= prefer_model may raise the degree above the
+    # power-of-two divisor when it divides (non-pow2 degree is legal)
+    assert remesh_plan(6, prefer_model=4, min_model=3).shape == (2, 3)
 
 
 def test_remesh_plan_validation():
@@ -217,3 +220,7 @@ def test_remesh_plan_validation():
         remesh_plan(4, prefer_model=0)
     with pytest.raises(ValueError, match="min_model"):
         remesh_plan(6, prefer_model=4, min_model=4)
+    # min_model may never GROW the degree past prefer_model (regression:
+    # 8 devices, prefer 2, min 4 used to return a (2, 4) mesh)
+    with pytest.raises(ValueError, match="exceeds prefer_model"):
+        remesh_plan(8, prefer_model=2, min_model=4)

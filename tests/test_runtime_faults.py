@@ -184,6 +184,70 @@ def test_device_loss_degrades_and_serves_requeued(packed, batch):
     assert_serves_after(srv, clock, x, want)
 
 
+def test_device_loss_during_bisection_loses_no_requests(packed, batch):
+    """Regression: device loss striking INSIDE the bisection recursion
+    must requeue the whole original window, not just the half that was
+    dispatching — the not-yet-dispatched siblings used to be silently
+    lost (no terminal state, take() None forever).
+
+    Script (max_retries=0 keeps the dispatch count deterministic):
+    d0 cohort [0,1,2,3] hits poison rid=1 → bisect; d1 [0,1] poison →
+    bisect; d2 singleton [0] is clean of the poison, so the armed
+    device loss fires there — with [1] and [2,3] never dispatched.
+    """
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed,
+        FaultPlan.of(FaultSpec("poison", rid=1),
+                     FaultSpec("device_loss", survivors=1, at_dispatch=2)),
+        retry=SV.RetryPolicy(max_retries=0))
+    sup = ServingSupervisor(srv, "m", backend="jnp")
+    rids = submit_all(srv, x, range(4))
+    clock.advance(1.0)
+    with pytest.raises(SV.DeviceLossError):
+        srv.step()
+    # the sharp invariant: ALL four requests are back, in FIFO order
+    assert srv.pending() == 4
+    assert [r.rid for r in srv._queue] == rids
+    # recovery: degrade + re-step completes every rid terminally
+    sup.degrade(1)
+    done = {r.rid: r for r in srv.step()}
+    assert sorted(done) == rids
+    assert done[1].status == "error"
+    assert isinstance(done[1].error, PoisonRequestError)
+    ok = [r for r in rids if r != 1]
+    assert all(done[r].status == "ok" for r in ok)
+    np.testing.assert_array_equal(
+        np.stack([done[r].result for r in ok]),
+        want[[i for i in range(4) if i != 1]])
+    assert srv.telemetry.metrics.value("serve.bisections") > 0
+    assert_serves_after(srv, clock, x, want)
+
+
+def test_device_loss_during_bisection_supervised_end_to_end(packed, batch):
+    """The same overlap driven through ServingSupervisor.step — the
+    chaos-CI path: one supervised step absorbs the mid-bisection loss,
+    degrades, and finishes every rid."""
+    x, want = batch
+    srv, clock, _ = mk_server(
+        packed,
+        FaultPlan.of(FaultSpec("poison", rid=1),
+                     FaultSpec("device_loss", survivors=1, at_dispatch=2)),
+        retry=SV.RetryPolicy(max_retries=0))
+    sup = ServingSupervisor(srv, "m", backend="jnp")
+    rids = submit_all(srv, x, range(4))
+    clock.advance(1.0)
+    done = {r.rid: r for r in sup.step()}
+    for rid in rids:
+        assert rid in done
+        assert done[rid].status in SV.TERMINAL_STATES
+    assert done[1].status == "error"
+    assert all(done[r].status == "ok" for r in rids if r != 1)
+    assert sup.events[0].requeued == 4
+    assert srv.pending() == 0
+    assert_serves_after(srv, clock, x, want)
+
+
 def test_device_loss_warm_restores_from_checkpoint(packed, batch, tmp_path):
     """With a ckpt_dir and a healthy-path checkpoint, degrade restores
     the packed tree from disk (reshard-on-restore), not the live tree."""
@@ -270,6 +334,26 @@ def test_no_grace_means_no_timeouts(packed, batch):
     assert done[rid].status == "ok"
 
 
+def test_zero_deadline_budget_is_not_instant_timeout(packed, batch):
+    """submit(x, deadline=0) means "flush me NOW", not "time me out
+    now": with a zero budget the grace window falls back to
+    default_deadline, so a flush that lands any wall-clock instant
+    after submission still serves the request — while a genuinely
+    ancient zero-budget request does age out."""
+    x, want = batch
+    srv, clock, _ = mk_server(packed, timeout_grace=2.0)
+    rid = srv.submit(x[0], deadline=0.0)
+    clock.advance(0.001)        # later than submit, inside 2x5ms grace
+    done = {r.rid: r for r in srv.step()}
+    assert done[rid].status == "ok"
+    np.testing.assert_array_equal(done[rid].result, want[0])
+    stale = srv.submit(x[1], deadline=0.0)
+    clock.advance(0.050)        # way past the fallback grace window
+    done = {r.rid: r for r in srv.step()}
+    assert done[stale].status == "timeout"
+    assert done[stale].result is None
+
+
 def test_full_queue_sheds_with_typed_error(packed, batch):
     x, _ = batch
     srv, clock, _ = mk_server(packed, max_queue=2)
@@ -280,6 +364,9 @@ def test_full_queue_sheds_with_typed_error(packed, batch):
     with pytest.raises(SV.BackpressureError):
         srv.serve([x[2], x[3]])
     assert srv.telemetry.metrics.value("serve.shed") == 3
+    # submit() and serve() bump the SAME counter pair — a dashboard
+    # keyed on serve.rejected must not undercount shed batches
+    assert srv.telemetry.metrics.value("serve.rejected") == 3
     assert srv.pending() == 2            # nothing half-admitted
 
 
